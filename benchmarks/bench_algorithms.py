@@ -1,0 +1,79 @@
+"""Paper Tab. 10: inference-ONLY algorithm comparison (single 'thread' —
+one CPU device here), across tree counts.  Claim: QuickScorer has the
+best single-thread latency; the naive traversal is the slowest; the
+tensorized (HummingBird) form pays for its dense path tensors.
+
+Also benchmarks the Pallas kernels in interpret mode — NOT a wall-clock
+claim (interpret mode is a Python emulator; the compiled-TPU story lives
+in §Roofline) but a per-call overhead record, so the kernel path is
+exercised by the same harness."""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.algorithms import ALGORITHMS, predict_raw
+
+ALGOS = ("naive", "predicated", "compiled", "hummingbird", "quickscorer")
+
+
+def _time(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(dataset="higgs", trees=(10, 500, 1600), batch=2048,
+        include_naive_upto=100, include_pallas=False):
+    rows = []
+    x, _ = C.bench_data(dataset, scale=1.0)
+    x = jnp.asarray(x[:batch])
+    for T in trees:
+        forest = C.get_forest(dataset, "xgboost", T)
+        for algo in ALGOS:
+            if algo == "naive" and T > include_naive_upto:
+                continue  # per-(sample,tree) while_loop: prohibitive
+            fn = jax.jit(lambda xx, a=algo: predict_raw(forest, xx, a))
+            dt = _time(fn, x)
+            rows.append(dict(dataset=dataset, model="xgboost", trees=T,
+                             platform=f"algo-{algo}", load_s=0.0,
+                             infer_s=round(dt, 5), write_s=0.0,
+                             total_s=round(dt, 5),
+                             checksum=float(jnp.sum(fn(x)))))
+        if include_pallas and T <= 100:
+            from repro.kernels.ops import KERNEL_ALGORITHMS
+            xs = x[:64]
+            for name, kfn in KERNEL_ALGORITHMS.items():
+                dt = _time(lambda xx: kfn(forest, xx, interpret=True), xs,
+                           warmup=0, iters=1)
+                rows.append(dict(dataset=dataset, model="xgboost", trees=T,
+                                 platform=f"pallas-{name}(interp)",
+                                 load_s=0.0, infer_s=round(dt, 5),
+                                 write_s=0.0, total_s=round(dt, 5),
+                                 checksum=0.0))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trees", default="10,500,1600")
+    ap.add_argument("--batch", type=int, default=2048)
+    ap.add_argument("--pallas", action="store_true")
+    args = ap.parse_args()
+    trees = tuple(int(t) for t in args.trees.split(","))
+    C.print_rows(run(trees=trees, batch=args.batch,
+                     include_pallas=args.pallas))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Tab. 4–6: MEDIUM/LARGE dense datasets (Higgs, Airline, TPCx-AI,
+row-scaled).  Claims: netsdb-udf wins small models by avoiding transfer;
+netsdb-rel (model parallelism) overtakes udf as trees grow; the netsDB
+advantage shrinks as inference compute starts to dominate."""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+
+from benchmarks import common as C
+from repro.core.reuse import ModelReuseCache
+from repro.db import loader as ld
+from repro.db.query import ForestQueryEngine
+from repro.db.store import TensorBlockStore
+
+ALGO = "predicated"
+
+
+def run(datasets=("higgs", "airline", "tpcxai"), trees=C.TREE_GRID,
+        model_types=("xgboost",), scale=1.0):
+    rows = []
+    for ds in datasets:
+        x, y = C.bench_data(ds, scale=scale)
+        with tempfile.TemporaryDirectory() as td:
+            csv = os.path.join(td, f"{ds}.csv")
+            ld.write_csv(csv, x)
+            store = TensorBlockStore(default_page_rows=2048)
+            store.put(ds, x)
+            engine = ForestQueryEngine(store,
+                                       reuse_cache=ModelReuseCache())
+            for mt in model_types:
+                for T in trees:
+                    forest = C.get_forest(ds, mt, T)
+                    base = dict(dataset=ds, model=mt, trees=T)
+                    rows.append({**base,
+                                 **C.run_standalone(forest, csv, "csv",
+                                                    ALGO,
+                                                    n_features=x.shape[1])})
+                    for plan in ("udf", "rel"):
+                        rows.append({**base,
+                                     **C.run_netsdb(forest, store, ds,
+                                                    plan, ALGO,
+                                                    engine=engine)})
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--datasets", default="higgs")
+    args = ap.parse_args()
+    trees = C.FAST_TREE_GRID if args.fast else C.TREE_GRID
+    C.print_rows(run(datasets=tuple(args.datasets.split(",")),
+                     trees=trees, scale=args.scale))
+
+
+if __name__ == "__main__":
+    main()

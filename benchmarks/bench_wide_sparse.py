@@ -1,0 +1,71 @@
+"""Paper Tab. 7–9: WIDE and/or SPARSE datasets (Bosch NaN-dense-wide,
+Epsilon array-typed-wide, Criteo LIBSVM-sparse).  Claims: the expensive
+load/convert path (array-column parse, LIBSVM densify) makes in-database
+inference win by the largest factors; sparse storage (criteo) shrinks the
+transfer bottleneck and with it the in-DB advantage."""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+
+from benchmarks import common as C
+from repro.core.reuse import ModelReuseCache
+from repro.db import loader as ld
+from repro.db.query import ForestQueryEngine
+from repro.db.store import TensorBlockStore
+
+ALGO = "predicated"
+FILE_KIND = {"bosch": "csv", "epsilon": "array", "criteo": "libsvm"}
+
+
+def run(datasets=("bosch", "epsilon", "criteo"), trees=C.TREE_GRID,
+        scale=1.0):
+    rows = []
+    for ds in datasets:
+        x, y = C.bench_data(ds, scale=scale)
+        kind = FILE_KIND[ds]
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, f"{ds}.dat")
+            if kind == "csv":
+                ld.write_csv(path, x)
+            elif kind == "array":
+                ld.write_array_rows(path, x)
+            else:
+                ld.write_libsvm(path, x, y)
+            store = TensorBlockStore(default_page_rows=512)
+            store.put(ds, x)
+            engine = ForestQueryEngine(store,
+                                       reuse_cache=ModelReuseCache())
+            for T in trees:
+                forest = C.get_forest(ds, "xgboost", T)
+                base = dict(dataset=ds, model="xgboost", trees=T,
+                            file_kind=kind)
+                rows.append({**base,
+                             **C.run_standalone(forest, path, kind, ALGO,
+                                                n_features=x.shape[1])})
+                for plan in ("udf", "rel"):
+                    rows.append({**base,
+                                 **C.run_netsdb(forest, store, ds, plan,
+                                                ALGO, engine=engine)})
+                C.run_netsdb(forest, store, ds, "rel+reuse", ALGO,
+                             engine=engine)
+                rows.append({**base,
+                             **C.run_netsdb(forest, store, ds, "rel+reuse",
+                                            ALGO, engine=engine)})
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    trees = C.FAST_TREE_GRID if args.fast else C.TREE_GRID
+    C.print_rows(run(trees=trees, scale=args.scale),
+                 extra_cols=("file_kind",))
+
+
+if __name__ == "__main__":
+    main()

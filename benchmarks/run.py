@@ -1,0 +1,106 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]`` runs the reduced
+grid (CPU-minutes); ``--full`` runs the paper tree grid {10, 500, 1600}
+everywhere.  Output: CSV blocks per section plus a final
+``name,us_per_call,derived`` summary (one line per table, total seconds
+of the netsDB-best platform vs the standalone baseline)."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import common as C
+
+
+def _summary(rows, table):
+    """Best in-DB total vs best standalone total per (dataset, trees)."""
+    out = []
+    bykey = {}
+    for r in rows:
+        key = (r.get("dataset"), r.get("trees"))
+        bykey.setdefault(key, []).append(r)
+    for (ds, T), rs in bykey.items():
+        indb = [r for r in rs if str(r["platform"]).startswith("netsdb")]
+        ext = [r for r in rs if str(r["platform"]).startswith("standalone")]
+        if not indb or not ext:
+            continue
+        b_in = min(indb, key=lambda r: r["total_s"])
+        b_ex = min(ext, key=lambda r: r["total_s"])
+        speedup = b_ex["total_s"] / max(b_in["total_s"], 1e-9)
+        out.append(C.csv_line(
+            f"{table}/{ds}/trees{T}", b_in["total_s"],
+            f"best_indb={b_in['platform']} speedup_vs_standalone="
+            f"{speedup:.2f}x"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--scale", type=float, default=None)
+    args = ap.parse_args()
+    trees = C.TREE_GRID if args.full else ((10, 100) if args.fast
+                                           else (10, 500))
+    scale = args.scale if args.scale is not None else \
+        (0.25 if args.fast else 1.0)
+
+    summary = []
+    t_start = time.time()
+
+    from benchmarks import bench_small
+    print("## Tab2-3: small dense datasets (fraud, year)")
+    rows = bench_small.run(trees=trees, scale=scale)
+    C.print_rows(rows)
+    summary += _summary(rows, "tab2-3")
+
+    from benchmarks import bench_large
+    print("\n## Tab4-6: medium/large dense datasets (higgs scaled)")
+    rows = bench_large.run(datasets=("higgs",) if not args.full else
+                           ("higgs", "airline", "tpcxai"),
+                           trees=trees, scale=scale)
+    C.print_rows(rows)
+    summary += _summary(rows, "tab4-6")
+
+    from benchmarks import bench_wide_sparse
+    print("\n## Tab7-9: wide/sparse datasets (bosch, epsilon, criteo)")
+    rows = bench_wide_sparse.run(trees=trees, scale=scale)
+    C.print_rows(rows, extra_cols=("file_kind",))
+    summary += _summary(rows, "tab7-9")
+
+    from benchmarks import bench_algorithms
+    print("\n## Tab10: single-device inference-only algorithm comparison")
+    rows = bench_algorithms.run(trees=trees, batch=1024)
+    C.print_rows(rows)
+    for r in rows:
+        summary.append(C.csv_line(
+            f"tab10/{r['platform']}/trees{r['trees']}", r["infer_s"]))
+
+    from benchmarks import bench_conversion
+    print("\n## Fig8: model conversion + loading overheads")
+    rows = bench_conversion.run(trees_grid=trees)
+    C.print_rows(rows)
+    for r in rows:
+        summary.append(C.csv_line(
+            f"fig8/{r['platform']}/trees{r['trees']}", r["total_s"],
+            "compile+convert"))
+
+    from benchmarks import bench_batching
+    print("\n## Sec7: batching / vectorization granularity")
+    rows = bench_batching.run(trees=trees[-1], scale=scale)
+    C.print_rows(rows)
+    for r in rows:
+        summary.append(C.csv_line(
+            f"sec7/{r['platform']}", r["total_s"]))
+
+    print(f"\n## summary (name,us_per_call,derived) "
+          f"[total bench wall: {time.time() - t_start:.0f}s]")
+    for line in summary:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

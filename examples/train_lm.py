@@ -1,0 +1,63 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the fault-tolerant loop (checkpoint + deterministic replay).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+Uses a width-reduced olmo-1b (~100M params at d_model=512, 8 layers) on
+the deterministic synthetic pipeline; loss drops from ~ln(V) as the model
+learns the pattern structure.  The same entry points run the full configs
+on a pod (launch/train.py).
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.dist.sharding import make_plan
+from repro.train.data import DataConfig, synthetic_batch
+from repro.train.fault import TrainLoop
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.trainer import init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("olmo-1b"), num_layers=args.layers,
+        d_model=args.d_model, num_heads=args.d_model // 64,
+        num_kv_heads=args.d_model // 64, head_dim=64,
+        d_ff=4 * args.d_model, vocab_size=50304, remat=False)
+    n_params = cfg.param_count()
+    print(f"model: {n_params/1e6:.1f}M params "
+          f"({cfg.num_layers}L d={cfg.d_model})")
+
+    opt = make_optimizer(OptimizerConfig(
+        name="adamw", lr=3e-4, warmup_steps=20, total_steps=args.steps))
+    splan = make_plan(cfg, None)
+    step_fn = jax.jit(make_train_step(cfg, opt, splan))
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))
+
+    dc = DataConfig(seed=0, vocab_size=cfg.vocab_size, batch=args.batch,
+                    seq_len=args.seq)
+    loop = TrainLoop(step_fn, lambda k: synthetic_batch(dc, k),
+                     ckpt_dir=args.ckpt_dir, ckpt_every=100)
+    state, report = loop.run(state, args.steps)
+    print(f"loss: {report.losses[0]:.3f} -> {report.losses[-1]:.3f} "
+          f"over {args.steps} steps "
+          f"({sum(report.step_times)/len(report.step_times):.2f}s/step)")
+    assert report.losses[-1] < report.losses[0]
+
+
+if __name__ == "__main__":
+    main()

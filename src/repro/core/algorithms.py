@@ -1,0 +1,226 @@
+"""The paper's F1 axis: decision-forest inference algorithms, in JAX.
+
+Four backends over the same dense complete-tree ``Forest``:
+
+  naive       per (sample, tree) ``lax.while_loop`` with early exit at
+              premature leaves — the faithful "naive tree traversal"
+              (paper Fig. 2a).  Data-dependent loop; the TPU-hostile
+              baseline every platform in the paper starts from.
+  predicated  fixed-depth branch-free descent ``idx = 2*idx + 1 + cond``
+              (paper Fig. 2c / Nvidia FIL).  ``unroll=True`` is the
+              "compiled" variant (paper Fig. 2b): XLA sees straight-line
+              select chains, playing the role of lleaves/TreeLite codegen.
+  hummingbird GEMM formulation (paper Fig. 1b): predicate vector S, shared
+              path matrix C, leaf one-hot by count match.
+  quickscorer bit-vector AND of FALSE-node masks (paper Fig. 1c), TPU-dense
+              adaptation: ALL node predicates evaluated vectorially, AND
+              reduced over uint32 words, exit leaf = lowest surviving bit.
+
+All are vectorized over a [B, F] sample block (the paper's F4 axis) and
+return per-tree raw scores [B, T]; ``postprocess`` aggregates them (phase 2).
+Missing values: NaN features follow ``default_left``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.forest import Forest, hb_path_matrix, qs_bitvectors
+
+__all__ = [
+    "naive_predict",
+    "predicated_predict",
+    "hummingbird_predict",
+    "quickscorer_predict",
+    "predict_raw",
+    "ALGORITHMS",
+]
+
+
+def _go_left(x_f: jax.Array, thr: jax.Array, default_left: jax.Array) -> jax.Array:
+    """Branch direction including NaN handling. True = left child."""
+    return jnp.where(jnp.isnan(x_f), default_left, x_f < thr)
+
+
+# ---------------------------------------------------------------------------
+# 1. Naive traversal
+# ---------------------------------------------------------------------------
+
+
+def naive_predict(forest: Forest, x: jax.Array) -> jax.Array:
+    """[B, F] -> [B, T] via per-(sample, tree) while_loop with early exit."""
+    I = forest.num_internal
+
+    def one(x_row, feature, threshold, default_left, node_is_leaf, node_value, leaf_value):
+        def cond(state):
+            pos, _ = state
+            at_internal = pos < I
+            premature = jnp.where(at_internal, node_is_leaf[jnp.minimum(pos, I - 1)], False)
+            return at_internal & ~premature
+
+        def body(state):
+            pos, _ = state
+            f = feature[pos]
+            left = _go_left(x_row[f], threshold[pos], default_left[pos])
+            nxt = 2 * pos + 1 + (1 - left.astype(jnp.int32))
+            return nxt, nxt
+
+        pos, _ = jax.lax.while_loop(cond, body, (jnp.int32(0), jnp.int32(0)))
+        return jnp.where(
+            pos < I, node_value[jnp.minimum(pos, I - 1)], leaf_value[jnp.maximum(pos - I, 0)]
+        )
+
+    per_tree = jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0, 0))  # over trees
+    per_sample = jax.vmap(per_tree, in_axes=(0, None, None, None, None, None, None))
+    return per_sample(
+        x,
+        forest.feature,
+        forest.threshold,
+        forest.default_left,
+        forest.node_is_leaf,
+        forest.node_value,
+        forest.leaf_value,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 2. Predicated traversal (and its unrolled / "compiled" variant)
+# ---------------------------------------------------------------------------
+
+
+def predicated_predict(forest: Forest, x: jax.Array, *, unroll: bool = False) -> jax.Array:
+    """[B, F] -> [B, T]; fixed-depth branch-free descent.
+
+    Pass-through completion makes early leaves behave identically, so no
+    early-exit test is needed — exactly the FIL trick, adapted so that a
+    whole (sample-block × tree-block) advances one level per step on the VPU.
+    """
+    B = x.shape[0]
+    T, I = forest.feature.shape
+    t_ix = jnp.arange(T)[None, :]  # broadcast against idx [B, T]
+
+    def step(idx):
+        f = forest.feature[t_ix, idx]  # [B, T]
+        thr = forest.threshold[t_ix, idx]
+        dl = forest.default_left[t_ix, idx]
+        xv = jnp.take_along_axis(x, f, axis=1)  # [B, T]
+        left = _go_left(xv, thr, dl)
+        return 2 * idx + 1 + (1 - left.astype(jnp.int32))
+
+    idx = jnp.zeros((B, T), jnp.int32)
+    if unroll:
+        for _ in range(forest.depth):
+            idx = step(idx)
+    else:
+        idx = jax.lax.fori_loop(0, forest.depth, lambda _, i: step(i), idx)
+    leaf = idx - I  # [B, T]
+    return forest.leaf_value[t_ix, leaf]
+
+
+# ---------------------------------------------------------------------------
+# 3. HummingBird (GEMM) formulation
+# ---------------------------------------------------------------------------
+
+
+def hummingbird_predict(
+    forest: Forest,
+    x: jax.Array,
+    *,
+    gemm_features: bool = False,
+) -> jax.Array:
+    """[B, F] -> [B, T] via the tensor formulation.
+
+    S[b,t,i] = predicate of node i of tree t on sample b (1 = go left).
+    P = S @ C (shared structure-only path matrix), exit leaf where
+    P == D_count, prediction = onehot(P==D) @ leaf_value.
+
+    ``gemm_features=True`` additionally computes the feature-select step as
+    a one-hot GEMM (X @ A), HummingBird's pure-GEMM mode — only sensible for
+    narrow features; default uses a gather (HB's "tree traversal" feature
+    fetch) which is what its TVM backend also lowers to.
+    """
+    C_np, D_np = hb_path_matrix(forest.depth)
+    C = jnp.asarray(C_np, jnp.float32)  # [I, L]
+    D = jnp.asarray(D_np, jnp.float32)  # [L]
+
+    if gemm_features:
+        A = jax.nn.one_hot(forest.feature, x.shape[1], dtype=x.dtype)  # [T, I, F]
+        xv = jnp.einsum("bf,tif->bti", x, A)
+    else:
+        xv = x[:, forest.feature]  # [B, T, I]
+    s = _go_left(xv, forest.threshold[None], forest.default_left[None])
+    P = jnp.einsum("bti,il->btl", s.astype(jnp.float32), C)  # [B, T, L]
+    onehot = (P == D[None, None, :]).astype(jnp.float32)
+    return jnp.einsum("btl,tl->bt", onehot, forest.leaf_value)
+
+
+# ---------------------------------------------------------------------------
+# 4. QuickScorer, dense-TPU adaptation
+# ---------------------------------------------------------------------------
+
+
+def quickscorer_predict(forest: Forest, x: jax.Array) -> jax.Array:
+    """[B, F] -> [B, T] via bitvector AND of FALSE nodes.
+
+    CPU QuickScorer finds FALSE nodes by per-feature binary search; on the
+    VPU it is cheaper to evaluate *every* node predicate densely and select
+    the bitvector or all-ones.  AND-reduction over the I axis runs as a
+    log-depth tree on uint32 words; exit leaf = count-trailing-zeros of the
+    first non-zero word.
+    """
+    T, I = forest.feature.shape
+    L = forest.num_leaves
+    W = (L + 31) // 32
+    bv = jnp.asarray(qs_bitvectors(forest.depth))  # [I, W] uint32 (structure-only)
+
+    xv = x[:, forest.feature]  # [B, T, I]
+    is_false = ~_go_left(xv, forest.threshold[None], forest.default_left[None])
+    masks = jnp.where(is_false[..., None], bv[None, None], jnp.uint32(0xFFFFFFFF))  # [B,T,I,W]
+
+    # log-tree AND reduction over I (pad to power of two with all-ones).
+    n = 1 << int(np.ceil(np.log2(max(I, 1))))
+    pad = n - I
+    if pad:
+        masks = jnp.pad(
+            masks, ((0, 0), (0, 0), (0, pad), (0, 0)),
+            constant_values=np.uint32(0xFFFFFFFF),
+        )
+    while masks.shape[2] > 1:
+        h = masks.shape[2] // 2
+        masks = jnp.bitwise_and(masks[:, :, :h], masks[:, :, h:])
+    surviving = masks[:, :, 0]  # [B, T, W] — ≥1 bit set by construction
+
+    # lowest set bit over W LSB-first words.
+    nonzero = surviving != 0
+    first_word = jnp.argmax(nonzero, axis=-1)  # [B, T]
+    word = jnp.take_along_axis(surviving, first_word[..., None], axis=-1)[..., 0]
+    low = word & (~word + jnp.uint32(1))  # isolate lowest set bit
+    ctz = jnp.bitwise_count(low - jnp.uint32(1)).astype(jnp.int32)
+    leaf = first_word.astype(jnp.int32) * 32 + ctz  # [B, T]
+    return forest.leaf_value[jnp.arange(T)[None, :], leaf]
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+ALGORITHMS = {
+    "naive": naive_predict,
+    "predicated": predicated_predict,
+    "compiled": partial(predicated_predict, unroll=True),
+    "hummingbird": hummingbird_predict,
+    "quickscorer": quickscorer_predict,
+}
+
+
+def predict_raw(forest: Forest, x: jax.Array, algorithm: str = "predicated") -> jax.Array:
+    """Per-tree raw scores [B, T] with the chosen backend."""
+    try:
+        fn = ALGORITHMS[algorithm]
+    except KeyError:
+        raise ValueError(f"unknown algorithm {algorithm!r}; options {sorted(ALGORITHMS)}")
+    return fn(forest, x)

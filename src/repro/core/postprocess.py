@@ -1,0 +1,106 @@
+"""Phase 2 of decision-forest inference: per-tree score aggregation.
+
+The paper (Sec. 2) splits inference into phase 1 (find the exit leaf of every
+tree — ``algorithms.predict_raw``) and phase 2, which differs per family:
+
+  RandomForest  averages all trees' exit values, then applies a sigmoid to
+                produce a probability score (paper Sec. 2, describing the
+                sklearn binary-classification path).
+  XGBoost /     sums the exit-leaf weights (plus the base score margin) and
+  LightGBM      applies a sigmoid.
+
+Regression drops the sigmoid.  Padded identity trees (``pad_trees``) carry
+zero leaves so SUM is unaffected; MEAN divides by the *true* tree count that
+the padder returns.
+
+This module is also where the relation-centric AGGREGATE operator's merge
+semantics live: partial per-tree-partition results combine with ``+`` (sum of
+raw scores) for every family, and only the *final* step applies mean/sigmoid
+— which is what makes the paper's model-parallel psum-tree legal.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "aggregate_raw",
+    "postprocess",
+    "predict_proba",
+    "predict_label",
+]
+
+
+def aggregate_raw(raw: jax.Array) -> jax.Array:
+    """[B, T] per-tree scores -> [B] summed raw margin (merge-combinable)."""
+    return jnp.sum(raw, axis=-1)
+
+
+def postprocess(
+    summed: jax.Array,
+    *,
+    model_type: str,
+    task: str = "classification",
+    num_trees: int,
+    base_score: float = 0.0,
+) -> jax.Array:
+    """[B] summed raw scores -> [B] final prediction.
+
+    ``num_trees`` must be the TRUE (pre-padding) tree count.
+    """
+    if model_type == "randomforest":
+        mean = summed / jnp.asarray(num_trees, summed.dtype)
+        if task == "classification":
+            # Leaf values are class-1 probabilities; their mean already IS a
+            # probability (sklearn semantics). The paper's prose describes an
+            # extra sigmoid; applying one would push every score above 0.5,
+            # so we keep the sklearn behaviour (clipped mean).
+            return jnp.clip(mean, 0.0, 1.0)
+        if task == "regression":
+            return mean
+    elif model_type in ("xgboost", "lightgbm"):
+        margin = summed + jnp.asarray(base_score, summed.dtype)
+        if task == "classification":
+            return jax.nn.sigmoid(margin)
+        if task == "regression":
+            return margin
+    else:
+        raise ValueError(f"unknown model_type {model_type!r}")
+    raise ValueError(f"unknown task {task!r}")
+
+
+@partial(jax.jit, static_argnames=("model_type", "task", "num_trees", "base_score"))
+def _post_jit(summed, *, model_type, task, num_trees, base_score):
+    return postprocess(
+        summed,
+        model_type=model_type,
+        task=task,
+        num_trees=num_trees,
+        base_score=base_score,
+    )
+
+
+def predict_proba(forest, x: jax.Array, *, algorithm: str = "predicated",
+                  num_trees: int | None = None) -> jax.Array:
+    """Convenience single-device end-to-end predict (phase 1 + phase 2)."""
+    from repro.core.algorithms import predict_raw
+
+    raw = predict_raw(forest, x, algorithm)
+    return _post_jit(
+        aggregate_raw(raw),
+        model_type=forest.model_type,
+        task=forest.task,
+        num_trees=int(num_trees if num_trees is not None else forest.num_trees),
+        base_score=forest.base_score,
+    )
+
+
+def predict_label(forest, x: jax.Array, *, algorithm: str = "predicated",
+                  num_trees: int | None = None) -> jax.Array:
+    p = predict_proba(forest, x, algorithm=algorithm, num_trees=num_trees)
+    if forest.task == "classification":
+        return (p >= 0.5).astype(jnp.int32)
+    return p

@@ -1,0 +1,1 @@
+"""In-database layer: tensor-block store, external loaders, query plans."""

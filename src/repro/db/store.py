@@ -1,0 +1,141 @@
+"""The tensor-block store: netsDB's native storage, TPU-resident.
+
+Paper Sec. 3.1: "the input samples are stored as a collection of tensor
+blocks, called sample blocks. Each block is a 2D tensor that represents a
+vector of feature vectors."  Our mapping (DESIGN.md Sec. 3): a stored dataset
+is ONE device-resident array [N, F] laid out as ``page_rows``-row pages,
+sharded over the mesh ``data`` axis (and replicated over ``model``), plus a
+catalog entry.  "In-database inference" = the query plan consumes these
+device buffers directly; the external path (db/loader.py) must parse +
+convert + transfer through the host first — exactly the boundary whose cost
+the paper measures.
+
+Pages are the batching unit (paper F3): a batch is a contiguous page range,
+and the page↔step mapping is deterministic (page p of batch k is always the
+same rows), which is what makes failure replay exact (DESIGN.md Sec. 8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["StoredDataset", "TensorBlockStore"]
+
+
+@dataclasses.dataclass
+class StoredDataset:
+    name: str
+    data: jax.Array               # [N_padded, F] device-resident, row-sharded
+    num_rows: int                 # true N (pre-padding)
+    page_rows: int
+    labels: jax.Array | None = None
+    task: str = "classification"
+    created_at: float = dataclasses.field(default_factory=time.time)
+
+    @property
+    def num_features(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def num_pages(self) -> int:
+        return self.data.shape[0] // self.page_rows
+
+    @property
+    def nbytes(self) -> int:
+        return self.data.size * self.data.dtype.itemsize
+
+    def page_slice(self, first_page: int, num_pages: int) -> jax.Array:
+        """[num_pages * page_rows, F] contiguous page range (device view)."""
+        lo = first_page * self.page_rows
+        return jax.lax.dynamic_slice_in_dim(
+            self.data, lo, num_pages * self.page_rows, axis=0)
+
+    def batches(self, pages_per_batch: int) -> Iterator[tuple[int, jax.Array]]:
+        """Deterministic (batch_index, block) iteration — the F3 batching
+        loop AND the replay unit: batch k always covers the same pages."""
+        for k, first in enumerate(range(0, self.num_pages, pages_per_batch)):
+            n = min(pages_per_batch, self.num_pages - first)
+            yield k, self.page_slice(first, n)
+
+
+class TensorBlockStore:
+    """Catalog of device-resident datasets (one store per pod; DESIGN §8)."""
+
+    def __init__(self, mesh: Mesh | None = None, *, default_page_rows: int = 1024):
+        self.mesh = mesh
+        self.default_page_rows = default_page_rows
+        self._datasets: dict[str, StoredDataset] = {}
+
+    # -- ingestion ----------------------------------------------------------
+    def put(
+        self,
+        name: str,
+        data: np.ndarray | jax.Array,
+        *,
+        labels: np.ndarray | None = None,
+        page_rows: int | None = None,
+        task: str = "classification",
+        dtype=jnp.float32,
+    ) -> StoredDataset:
+        """Ingest [N, F] rows: pad to whole pages (NaN rows — never counted
+        in results), shard rows over the mesh ``data`` axis, register."""
+        page_rows = page_rows or self.default_page_rows
+        arr = np.asarray(jax.device_get(data))
+        n = arr.shape[0]
+        # page padding AND divisibility by the data axis
+        row_multiple = page_rows
+        if self.mesh is not None and "data" in self.mesh.axis_names:
+            row_multiple = int(np.lcm(page_rows,
+                                      self.mesh.shape["data"] * page_rows))
+        pad = (-n) % row_multiple
+        if pad:
+            arr = np.concatenate(
+                [arr, np.full((pad, arr.shape[1]), np.nan, arr.dtype)])
+        dev = jnp.asarray(arr, dtype)
+        if self.mesh is not None:
+            sharding = NamedSharding(self.mesh, P("data", None))
+            dev = jax.device_put(dev, sharding)
+        lab = None
+        if labels is not None:
+            lab = jnp.asarray(np.asarray(labels), jnp.float32)
+        ds = StoredDataset(name=name, data=dev, num_rows=n,
+                           page_rows=page_rows, labels=lab, task=task)
+        self._datasets[name] = ds
+        return ds
+
+    def put_result(self, name: str, result: jax.Array, num_rows: int) -> StoredDataset:
+        """The WRITE operator's sink: register an output dataset."""
+        ds = StoredDataset(name=name, data=result[:, None] if result.ndim == 1
+                           else result,
+                           num_rows=num_rows, page_rows=self.default_page_rows)
+        self._datasets[name] = ds
+        return ds
+
+    # -- catalog --------------------------------------------------------------
+    def get(self, name: str) -> StoredDataset:
+        try:
+            return self._datasets[name]
+        except KeyError:
+            raise KeyError(f"dataset {name!r} not in store; "
+                           f"have {sorted(self._datasets)}")
+
+    def drop(self, name: str) -> None:
+        self._datasets.pop(name, None)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._datasets
+
+    def catalog(self) -> dict[str, dict[str, Any]]:
+        return {
+            n: dict(rows=d.num_rows, features=d.num_features,
+                    pages=d.num_pages, page_rows=d.page_rows,
+                    bytes=d.nbytes, task=d.task)
+            for n, d in self._datasets.items()
+        }

@@ -1,0 +1,89 @@
+"""Shared in-kernel building blocks for the forest Pallas kernels.
+
+TPU-native design notes (DESIGN.md Sec. 3): the MXU wants 128-aligned
+matmuls and the VPU wants dense 8x128 vector ops; data-dependent gathers are
+the enemy.  All three kernels therefore share one gather-free primitive:
+
+  dense predicate evaluation
+      s[b, t, i] = "sample b at internal node i of tree t goes LEFT"
+  computed as a one-hot MXU contraction:
+      onehot[t, i, f] = (feature[t, i] == f)       (built from iota compares)
+      xv = x @ onehot^T                            (MXU matmul, [BB, BT*I])
+      s  = where(isnan(xv'), default_left, xv < threshold)
+
+NaN note: the matmul contraction would turn a NaN feature into NaN only when
+the one-hot row selects it — but 0 * NaN = NaN would poison the row, so NaN
+inputs are pre-masked to 0 and a parallel "is-nan" indicator column is
+contracted with the same one-hot to recover per-node missingness exactly.
+
+The per-level one-hot *select* (fetch a value at a computed node index
+without a gather) is an iota compare + masked sum over the node axis — depth
+x I VPU work per (b, t), still far below the MXU predicate cost.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_predicates", "onehot_select", "block_heuristics"]
+
+
+def dense_predicates(x, feature, threshold, default_left, *, acc_dtype=jnp.float32):
+    """In-kernel dense predicate tensor.
+
+    x            [BB, F]   samples (may contain NaN)
+    feature      [BT, I]   int32
+    threshold    [BT, I]   f32
+    default_left [BT, I]   bool
+    returns s    [BB, BT, I] bool  (True = go left)
+    """
+    BB, F = x.shape
+    BT, I = feature.shape
+    # one-hot over features, built from a broadcasted iota compare (no gather)
+    f_iota = jax.lax.broadcasted_iota(jnp.int32, (BT, I, F), 2)
+    onehot = (feature[:, :, None] == f_iota).astype(acc_dtype)  # [BT, I, F]
+    x_nan = jnp.isnan(x)
+    x_safe = jnp.where(x_nan, jnp.zeros_like(x), x).astype(acc_dtype)
+    # MXU: [BB, F] @ [F, BT*I]
+    oh2 = onehot.reshape(BT * I, F).T
+    xv = jnp.dot(x_safe, oh2, preferred_element_type=acc_dtype)
+    xv = xv.reshape(BB, BT, I)
+    nanv = jnp.dot(x_nan.astype(acc_dtype), oh2,
+                   preferred_element_type=acc_dtype).reshape(BB, BT, I)
+    is_missing = nanv > 0.5
+    lt = xv < threshold[None].astype(acc_dtype)
+    return jnp.where(is_missing, default_left[None], lt)
+
+
+def onehot_select(values, idx):
+    """values [BT, N], idx [BB, BT] int32 -> out [BB, BT] = values[t, idx].
+
+    Gather-free: iota compare + masked sum over N (VPU).
+    """
+    BT, N = values.shape
+    BB = idx.shape[0]
+    n_iota = jax.lax.broadcasted_iota(jnp.int32, (BB, BT, N), 2)
+    mask = (idx[:, :, None] == n_iota)
+    return jnp.sum(jnp.where(mask, values[None], jnp.zeros_like(values)[None]),
+                   axis=2)
+
+
+def block_heuristics(B, T, I, L, F, *, vmem_budget_bytes=12 * 1024 * 1024,
+                     itemsize=4):
+    """Pick (BB, BT) so the kernel working set fits the VMEM budget.
+
+    Working set (f32 words):  x BB*F + trees 3*BT*I + onehot BT*I*F
+    + s BB*BT*I + leaves BT*L + out BB*BT.   MXU alignment: BB multiple of 8
+    (sublane), F/I contractions are already >=128 for depth-8 forests.
+    """
+    def words(bb, bt):
+        return (bb * F + 3 * bt * I + bt * I * F + 2 * bb * bt * I
+                + bt * L + bb * bt)
+
+    bb, bt = min(128, B), min(8, T)
+    while words(bb, bt) * itemsize > vmem_budget_bytes and bb > 8:
+        bb //= 2
+    while words(bb, bt) * itemsize > vmem_budget_bytes and bt > 1:
+        bt //= 2
+    return max(bb, 1), max(bt, 1)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused HummingBird (GEMM) forest inference.
+
+Paper Fig. 1(b): tree traversal as tensor algebra.  HummingBird materializes
+the predicate tensor S [B, T, I] and path tensor P [B, T, L] in device
+memory between GEMMs; those intermediates are the largest tensors in the
+whole computation (B*T*(I+L) words vs B*F + T*(I+L) for the inputs).
+
+TPU adaptation (DESIGN.md Sec. 3): fuse all three stages into one kernel so S
+and P live only in VMEM, per (sample-tile x tree-tile):
+
+  1. S  = dense predicate eval                 (MXU, gather-free, common.py)
+  2. P  = S @ C                                (MXU; C is the [I, L]
+          structure-only path matrix shared by ALL trees of a depth - a
+          consequence of the dense complete-tree layout, so it is loaded
+          once, not per tree)
+  3. out = sum_l (P == D[l]) * leaf_value[t,l] (VPU compare + MXU dot)
+
+HBM traffic per tile drops from (read S + write S + read P + write P) to
+zero — the roofline win measured in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import dense_predicates
+
+__all__ = ["hummingbird_kernel_call"]
+
+
+def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, c_ref, d_ref, out_ref):
+    x = x_ref[...]                        # [BB, F]
+    feat = feat_ref[...]                  # [BT, I]
+    thr = thr_ref[...]
+    dl = dl_ref[...] != 0
+    leaves = leaf_ref[...]                # [BT, L]
+    C = c_ref[...]                        # [I, L] shared structure matrix
+    D = d_ref[...]                        # [1, L] left-turn counts per leaf
+    BB = x.shape[0]
+    BT, I = feat.shape
+    L = C.shape[1]
+
+    s = dense_predicates(x, feat, thr, dl).astype(jnp.float32)   # [BB, BT, I]
+    # stage 2: path GEMM against the shared C — one [BB*BT, I] @ [I, L]
+    P = jnp.dot(s.reshape(BB * BT, I), C,
+                preferred_element_type=jnp.float32)              # [BB*BT, L]
+    # stage 3: exit-leaf one-hot (P == D) and leaf-value contraction
+    onehot = (P == D).astype(jnp.float32).reshape(BB, BT, L)
+    out_ref[...] = jnp.sum(onehot * leaves[None], axis=2)
+
+
+def hummingbird_kernel_call(x, feature, threshold, default_left, leaf_value,
+                            C, D, *, block_b, block_t, interpret=False):
+    """Raw pallas_call; shapes must already be padded to block multiples.
+
+    C [I, L] f32 and D [1, L] f32 are the structure-only tensors from
+    ``core.forest.hb_path_matrix`` (shared across trees of one depth).
+    """
+    B, F = x.shape
+    T, I = feature.shape
+    L = leaf_value.shape[1]
+    assert B % block_b == 0 and T % block_t == 0
+    grid = (B // block_b, T // block_t)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, F), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, L), lambda i, j: (j, 0)),
+            pl.BlockSpec((I, L), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, L), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        interpret=interpret,
+    )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value, C, D)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: predicated (branch-free) forest traversal.
+
+Paper Fig. 2(c) / Nvidia FIL adapted to the TPU (DESIGN.md Sec. 3): a tile of
+samples [BB, F] and a tile of trees (node arrays [BT, I]) are staged in VMEM;
+all node predicates are evaluated densely on the MXU once (gather-free,
+``common.dense_predicates``), then the fixed-depth descent
+
+    idx_{d+1} = 2*idx_d + 1 + (1 - s[b, t, idx_d])
+
+runs as ``depth`` unrolled VPU steps, where the data-dependent fetch
+``s[b, t, idx]`` is an iota-compare masked sum (``common.onehot_select``) —
+the FIL predication trick with the pointer arithmetic replaced by lane
+arithmetic.  The exit-leaf fetch is one more one-hot select over L.
+
+Grid: (ceil(B/BB), ceil(T/BT)); each program writes one [BB, BT] tile of raw
+per-tree scores.  Tree tiles are independent => the tree axis can be sharded
+across the mesh 'model' axis (relation-centric plan) with this same kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import dense_predicates, onehot_select
+
+__all__ = ["predicated_kernel_call"]
+
+
+def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, out_ref, *, depth):
+    x = x_ref[...]                       # [BB, F]
+    feat = feat_ref[...]                 # [BT, I]
+    thr = thr_ref[...]
+    dl = dl_ref[...] != 0                # int8 -> bool
+    leaves = leaf_ref[...]               # [BT, L]
+    BB = x.shape[0]
+    BT, I = feat.shape
+
+    s = dense_predicates(x, feat, thr, dl)          # [BB, BT, I] bool
+    s_val = s.astype(jnp.float32)
+
+    idx = jnp.zeros((BB, BT), jnp.int32)
+    for _ in range(depth):                          # unrolled descent
+        # go_left = s[b, t, idx]  via per-(b,t) one-hot select over I
+        go_left = jnp.zeros((BB, BT), jnp.float32)
+        # flatten the [BB, BT, I] select: iota compare on the node axis
+        n_iota = jax.lax.broadcasted_iota(jnp.int32, (BB, BT, I), 2)
+        mask = idx[:, :, None] == n_iota
+        go_left = jnp.sum(jnp.where(mask, s_val, 0.0), axis=2)
+        idx = 2 * idx + 1 + (1 - go_left.astype(jnp.int32))
+
+    leaf = idx - I                                  # [BB, BT] in [0, L)
+    out_ref[...] = onehot_select(leaves, leaf)
+
+
+def predicated_kernel_call(x, feature, threshold, default_left, leaf_value,
+                           *, depth, block_b, block_t, interpret=False):
+    """Raw pallas_call; shapes must already be padded to block multiples."""
+    B, F = x.shape
+    T, I = feature.shape
+    L = leaf_value.shape[1]
+    assert B % block_b == 0 and T % block_t == 0
+    grid = (B // block_b, T // block_t)
+
+    kernel = functools.partial(_kernel, depth=depth)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, F), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, L), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        interpret=interpret,
+    )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value)

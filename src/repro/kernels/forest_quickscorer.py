@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: QuickScorer (bit-vector) forest inference, dense form.
+
+Paper Fig. 1(c) / Lucchese et al. SIGIR'15: every internal node carries a
+bit-vector with zeros on the leaves its FALSE outcome makes unreachable;
+AND-ing the vectors of all FALSE nodes leaves the exit leaf as the lowest
+surviving bit.  The CPU algorithm avoids evaluating every node via
+per-feature sorted node lists + binary search — branchy, irregular,
+unbalanced (the reason the paper rejects it for relation-centric netsDB,
+Sec. 3.1, and the reason TFDF caps depth at 6 / 64-bit masks).
+
+TPU adaptation (DESIGN.md Sec. 3/6.2): evaluate ALL predicates densely on the
+MXU (the evaluation QuickScorer works to avoid is nearly free on a systolic
+array), then per 32-bit word
+
+    surviving[b, t, w] = AND_i ( s_false[b,t,i] ? bv[i, w] : 0xFFFFFFFF )
+
+as a log-depth halving tree on the VPU.  The ≤64-leaf limit disappears:
+depth-8 trees use W = 8 words.  Find-lowest-set-bit is a bit-expansion +
+cumsum==1 mask (no argmax), fused with the leaf-value contraction.
+
+The bit-vectors are STRUCTURE-ONLY for the dense complete layout (identical
+for every tree of a depth) => loaded once per kernel, not per tree.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import dense_predicates
+
+__all__ = ["quickscorer_kernel_call"]
+
+
+def _and_reduce(masks):
+    """[BB, BT, n] uint32 -> [BB, BT] AND over last axis (n a power of 2)."""
+    while masks.shape[2] > 1:
+        h = masks.shape[2] // 2
+        masks = jnp.bitwise_and(masks[:, :, :h], masks[:, :, h:])
+    return masks[:, :, 0]
+
+
+def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, bv_ref, out_ref,
+            *, num_words):
+    x = x_ref[...]                        # [BB, F]
+    feat = feat_ref[...]                  # [BT, I]
+    thr = thr_ref[...]
+    dl = dl_ref[...] != 0
+    leaves = leaf_ref[...]                # [BT, L]
+    bv = bv_ref[...]                      # [I, W] uint32 (structure-only)
+    BB = x.shape[0]
+    BT, I = feat.shape
+    L = leaves.shape[1]
+    W = num_words
+
+    s_false = ~dense_predicates(x, feat, thr, dl)        # [BB, BT, I]
+
+    # pad the node axis to a power of two with identity masks
+    n = 1
+    while n < I:
+        n *= 2
+    ones = jnp.uint32(0xFFFFFFFF)
+
+    bit_planes = []
+    for w in range(W):                                   # static unroll
+        bv_w = bv[:, w]                                  # [I]
+        m = jnp.where(s_false, bv_w[None, None, :], ones)  # [BB, BT, I]
+        if n != I:
+            m = jnp.concatenate(
+                [m, jnp.full((BB, BT, n - I), ones, jnp.uint32)], axis=2)
+        surv = _and_reduce(m)                            # [BB, BT] uint32
+        # expand the word into 32 LSB-first bit lanes
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (BB, BT, 32), 2)
+        bits = jax.lax.shift_right_logical(surv[:, :, None], shifts)
+        bit_planes.append(jnp.bitwise_and(bits, jnp.uint32(1)))
+    bits = jnp.concatenate(bit_planes, axis=2).astype(jnp.float32)
+    # lanes beyond L are phantom (never cleared, so always 1) — but the real
+    # exit leaf (< L) always survives and is lower, so slicing is exact.
+    bits = bits[:, :, :L]                                # [BB, BT, L]
+
+    # lowest set bit: bit set AND cumulative count == 1 (no argmax needed)
+    first = bits * (jnp.cumsum(bits, axis=2) == 1.0)
+    out_ref[...] = jnp.sum(first * leaves[None], axis=2)
+
+
+def quickscorer_kernel_call(x, feature, threshold, default_left, leaf_value,
+                            bitvectors, *, block_b, block_t, interpret=False):
+    """Raw pallas_call; shapes must already be padded to block multiples.
+
+    bitvectors [I, W] uint32 from ``core.forest.qs_bitvectors``.
+    """
+    B, F = x.shape
+    T, I = feature.shape
+    L = leaf_value.shape[1]
+    W = bitvectors.shape[1]
+    assert B % block_b == 0 and T % block_t == 0
+    assert W * 32 >= L, f"bit width {W*32} < leaves {L}"
+    grid = (B // block_b, T // block_t)
+
+    kernel = functools.partial(_kernel, num_words=W)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, F), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, L), lambda i, j: (j, 0)),
+            pl.BlockSpec((I, W), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        interpret=interpret,
+    )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value,
+      bitvectors)

@@ -1,0 +1,134 @@
+"""Public jit'd wrappers for the forest Pallas kernels.
+
+Handles everything the raw kernels assume away:
+  * padding the sample axis (zeros) and tree axis (pass-through zero-leaf
+    trees) to block multiples, and un-padding the output;
+  * block-size selection against the VMEM budget (``common.block_heuristics``);
+  * the structure-only side tensors (HummingBird C/D, QuickScorer
+    bit-vectors) — built once per depth and LRU-cached;
+  * ``interpret=`` defaulting to True off-TPU so the same call validates on
+    CPU and runs compiled on real hardware.
+
+The wrappers return RAW per-tree scores [B, T] like ``core.algorithms``;
+phase-2 aggregation stays in ``core.postprocess`` so the kernels are
+drop-in algorithm backends for the query planner.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.forest import Forest, hb_path_matrix, qs_bitvectors
+from repro.kernels.common import block_heuristics
+from repro.kernels.forest_predicated import predicated_kernel_call
+from repro.kernels.forest_hummingbird import hummingbird_kernel_call
+from repro.kernels.forest_quickscorer import quickscorer_kernel_call
+
+__all__ = [
+    "predicated_pallas",
+    "hummingbird_pallas",
+    "quickscorer_pallas",
+    "KERNEL_ALGORITHMS",
+    "predict_raw_pallas",
+]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_axis(x, axis, multiple, fill=0.0):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def _pad_forest_arrays(feature, threshold, default_left, leaf_value, block_t):
+    """Tree-axis padding with pass-through zero-leaf trees."""
+    feature = _pad_axis(feature, 0, block_t, 0)
+    threshold = _pad_axis(threshold, 0, block_t, np.float32(np.inf))
+    default_left = _pad_axis(default_left, 0, block_t, True)
+    leaf_value = _pad_axis(leaf_value, 0, block_t, 0.0)
+    return feature, threshold, default_left, leaf_value
+
+
+@functools.lru_cache(maxsize=16)
+def _hb_tensors(depth: int):
+    C, D = hb_path_matrix(depth)
+    return (jnp.asarray(C, jnp.float32),
+            jnp.asarray(D[None, :], jnp.float32))
+
+
+@functools.lru_cache(maxsize=16)
+def _qs_tensors(depth: int):
+    return jnp.asarray(qs_bitvectors(depth))
+
+
+def _blocks(forest: Forest, B, block_b, block_t):
+    T, I = forest.feature.shape
+    if block_b is None or block_t is None:
+        hb, ht = block_heuristics(B, T, I, forest.num_leaves,
+                                  forest.n_features)
+        block_b = block_b or hb
+        block_t = block_t or ht
+    return block_b, block_t
+
+
+def _run(kind: str, forest: Forest, x: jax.Array, *, block_b=None,
+         block_t=None, interpret=None) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    B = x.shape[0]
+    T = forest.num_trees
+    block_b, block_t = _blocks(forest, B, block_b, block_t)
+    xp = _pad_axis(x, 0, block_b)
+    fe, th, dl, lv = _pad_forest_arrays(
+        forest.feature, forest.threshold, forest.default_left,
+        forest.leaf_value, block_t)
+
+    if kind == "predicated":
+        raw = predicated_kernel_call(
+            xp, fe, th, dl, lv, depth=forest.depth,
+            block_b=block_b, block_t=block_t, interpret=interpret)
+    elif kind == "hummingbird":
+        C, D = _hb_tensors(forest.depth)
+        raw = hummingbird_kernel_call(
+            xp, fe, th, dl, lv, C, D,
+            block_b=block_b, block_t=block_t, interpret=interpret)
+    elif kind == "quickscorer":
+        bv = _qs_tensors(forest.depth)
+        raw = quickscorer_kernel_call(
+            xp, fe, th, dl, lv, bv,
+            block_b=block_b, block_t=block_t, interpret=interpret)
+    else:
+        raise ValueError(f"unknown kernel {kind!r}")
+    return raw[:B, :T]
+
+
+predicated_pallas = functools.partial(_run, "predicated")
+hummingbird_pallas = functools.partial(_run, "hummingbird")
+quickscorer_pallas = functools.partial(_run, "quickscorer")
+
+KERNEL_ALGORITHMS = {
+    "predicated_pallas": predicated_pallas,
+    "hummingbird_pallas": hummingbird_pallas,
+    "quickscorer_pallas": quickscorer_pallas,
+}
+
+
+def predict_raw_pallas(forest: Forest, x: jax.Array,
+                       algorithm: str = "hummingbird_pallas", **kw) -> jax.Array:
+    try:
+        fn = KERNEL_ALGORITHMS[algorithm]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel algorithm {algorithm!r}; "
+            f"options {sorted(KERNEL_ALGORITHMS)}")
+    return fn(forest, x, **kw)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the forest Pallas kernels.
+
+The oracle chain: ``core.algorithms.naive_predict`` (per-sample while_loop —
+the most literal transcription of tree traversal) is the root reference; the
+three vectorized jnp algorithms are validated against it in
+tests/test_algorithms.py, and each Pallas kernel is validated against its
+matching jnp algorithm here (same math, no Pallas) in tests/test_kernels.py.
+
+Every ref takes the SAME (forest, x) signature as the kernel wrapper and
+returns raw per-tree scores [B, T] in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms import (
+    hummingbird_predict,
+    naive_predict,
+    predicated_predict,
+    quickscorer_predict,
+)
+from repro.core.forest import Forest
+
+__all__ = [
+    "ref_naive",
+    "ref_predicated",
+    "ref_hummingbird",
+    "ref_quickscorer",
+    "REFERENCES",
+]
+
+
+def ref_naive(forest: Forest, x: jax.Array) -> jax.Array:
+    return naive_predict(forest, x).astype(jnp.float32)
+
+
+def ref_predicated(forest: Forest, x: jax.Array) -> jax.Array:
+    return predicated_predict(forest, x).astype(jnp.float32)
+
+
+def ref_hummingbird(forest: Forest, x: jax.Array) -> jax.Array:
+    return hummingbird_predict(forest, x).astype(jnp.float32)
+
+
+def ref_quickscorer(forest: Forest, x: jax.Array) -> jax.Array:
+    return quickscorer_predict(forest, x).astype(jnp.float32)
+
+
+REFERENCES = {
+    "predicated_pallas": ref_predicated,
+    "hummingbird_pallas": ref_hummingbird,
+    "quickscorer_pallas": ref_quickscorer,
+}

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware (task spec, MULTI-POD DRY-RUN): for each cell we build the
+production mesh from 512 host placeholder devices, lower the cell's step
+function against ShapeDtypeStruct inputs (no allocation), compile it, and
+record ``memory_analysis`` (fits?), ``cost_analysis`` (FLOPs/bytes) and
+the parsed collective schedule (→ EXPERIMENTS.md §Dry-run / §Roofline).
+
+The two env lines above MUST run before any jax import — jax locks the
+device count on first init.  Never set this flag globally.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.jsonl
+  ... add --multi-pod for the (pod=2, data=16, model=16) mesh.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.dist.sharding import (batch_specs, cache_specs, make_plan,
+                                 param_specs, tree_named)
+from repro.launch.mesh import V5E, make_production_mesh
+from repro.launch.roofline import (model_flops, parse_collectives,
+                                   roofline_terms)
+from repro.models.registry import get_bundle, input_specs
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.trainer import make_train_step, state_shapes
+
+# long_500k needs sub-quadratic attention: runnable for SSM/hybrid and the
+# chunked-local iRoPE MoE archs; skipped (and recorded) for pure
+# full-attention archs (DESIGN.md §4).
+LONG_OK = {"mamba2-2.7b", "zamba2-2.7b", "llama4-scout-17b-a16e",
+           "llama4-maverick-400b-a17b"}
+
+# big models use adafactor so the optimizer state fits 16 GB/chip (§5)
+ADAFACTOR_ARCHS = {"llama4-maverick-400b-a17b", "llama4-scout-17b-a16e",
+                   "yi-34b", "chameleon-34b"}
+
+
+def cell_skip_reason(arch: str, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        return ("full-attention arch: 500k decode KV-scan is linear but the "
+                "arch has no sub-quadratic path for its 500k context — "
+                "skipped per assignment, recorded in EXPERIMENTS.md")
+    return None
+
+
+def _sharded_sds(tree, specs, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    def one(sds, spec):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree_util.tree_map(one, tree, specs,
+                                  is_leaf=lambda x: isinstance(
+                                      x, jax.ShapeDtypeStruct))
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, *,
+                    opt_name: str | None = None, vocab_chunk: int = 16_384,
+                    overrides=None, microbatches: int = 1):
+    """Returns (fn, example_args) ready for jax.jit(...).lower(*args)."""
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    bundle = get_bundle(cfg)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        splan = make_plan(cfg, mesh)
+        opt = make_optimizer(OptimizerConfig(
+            name=opt_name or ("adafactor" if arch in ADAFACTOR_ARCHS
+                              else "adamw")))
+        step = make_train_step(cfg, opt, splan, vocab_chunk=vocab_chunk,
+                               microbatches=microbatches)
+        state_sds = state_shapes(cfg, opt)
+        st_specs = {"params": param_specs(state_sds["params"], mesh),
+                    "opt": param_specs(state_sds["opt"], mesh),
+                    "step": P()}
+        bspecs = {k: batch_specs(splan)[k] for k in specs}
+        args = (_sharded_sds(state_sds, st_specs, mesh),
+                _sharded_sds(specs, bspecs, mesh))
+        return step, args, cfg, shape, splan
+
+    splan = make_plan(cfg, mesh, decode_batch=(
+        shape.global_batch if shape.kind == "decode" else None))
+    params_sds = jax.eval_shape(
+        partial(bundle.init, cfg, dtype=jnp.bfloat16), jax.random.PRNGKey(0))
+    p_specs = param_specs(params_sds, mesh)
+    params_arg = _sharded_sds(params_sds, p_specs, mesh)
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return bundle.prefill(cfg, params, batch, splan)
+        bspecs = {k: batch_specs(splan)[k] for k in specs}
+        args = (params_arg, _sharded_sds(specs, bspecs, mesh))
+        return fn, args, cfg, shape, splan
+
+    # decode
+    def fn(params, caches, token):
+        return bundle.decode(cfg, params, caches, token, splan)
+    c_specs = cache_specs(specs["caches"], splan)
+    tok_spec = (P(None, None) if shape.global_batch <
+                int(np.prod([mesh.shape[a] for a in splan.data_axes] or [1]))
+                else batch_specs(splan)["tokens"])
+    args = (params_arg,
+            _sharded_sds(specs["caches"], c_specs, mesh),
+            jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32,
+                                 sharding=NamedSharding(mesh, tok_spec)))
+    return fn, args, cfg, shape, splan
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             keep_hlo: bool = False, opt_name=None, vocab_chunk=16_384,
+             overrides=None, unroll: bool = False,
+             microbatches: int = 1) -> dict:
+    """Lower + compile one cell; return the §Dry-run / §Roofline record.
+
+    ``unroll=True`` fully unrolls every lax.scan so cost_analysis counts
+    per-layer FLOPs/bytes/collectives exactly (XLA counts a while body
+    once) — used for the §Roofline table; the rolled variant is the
+    production program and the memory_analysis source."""
+    from repro.models import scanctl
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "unrolled_costs": unroll}
+    skip = cell_skip_reason(arch, shape_name)
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+    scanctl.UNROLL = unroll
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    try:
+        fn, args, cfg, shape, splan = build_lowerable(
+            arch, shape_name, mesh, opt_name=opt_name,
+            vocab_chunk=vocab_chunk, overrides=overrides,
+            microbatches=microbatches)
+        with mesh:
+            lowered = jax.jit(fn).lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+
+        # trip-count-aware per-chip costs (cost_analysis counts a while
+        # body once — hlo_cost re-derives exact totals; see hlo_cost.py)
+        from repro.launch import hlo_cost
+        corrected = hlo_cost.analyze(hlo)
+        flops_dev = float(corrected["flops"])
+        bytes_dev = float(corrected["bytes"])
+        coll_bytes = float(corrected["collective_bytes"])
+        terms = roofline_terms(flops_per_chip=flops_dev,
+                               bytes_per_chip=bytes_dev,
+                               coll_bytes_per_chip=coll_bytes)
+        mflops = model_flops(cfg, shape)
+        rec.update({
+            "status": "ok",
+            "attn_mode": splan.attn_mode,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "n_chips": n_chips,
+            "flops_per_chip": flops_dev,
+            "bytes_per_chip": bytes_dev,
+            "collective_bytes_per_chip": coll_bytes,
+            "collective_wire_bytes_per_chip":
+                float(corrected["collective_wire_bytes"]),
+            "collective_counts": corrected["collective_counts"],
+            "collective_bytes_by_kind":
+                corrected["collective_bytes_by_kind"],
+            "raw_cost_analysis_flops": float(cost.get("flops", 0.0)),
+            "raw_cost_analysis_bytes":
+                float(cost.get("bytes accessed", 0.0)),
+            "memory_analysis": {
+                k: getattr(mem, k) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            } if mem is not None else None,
+            "model_flops_total": mflops,
+            "model_flops_per_chip": mflops / n_chips,
+            "useful_flops_ratio": (mflops / n_chips / flops_dev
+                                   if flops_dev else 0.0),
+            **{k: v for k, v in terms.items()},
+            "roofline_fraction": (mflops / n_chips /
+                                  V5E["peak_flops_bf16"] /
+                                  terms["step_s_lower_bound"]
+                                  if terms["step_s_lower_bound"] else 0.0),
+        })
+        if keep_hlo:
+            rec["hlo_path"] = f"/tmp/hlo_{arch}_{shape_name}_{rec['mesh']}.txt"
+            with open(rec["hlo_path"], "w") as fh:
+                fh.write(hlo)
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        scanctl.UNROLL = False
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--vocab-chunk", type=int, default=16_384)
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll scans for exact per-layer cost accounting")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    out = open(args.out, "a") if args.out else None
+    failed = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               keep_hlo=args.keep_hlo,
+                               opt_name=args.optimizer,
+                               vocab_chunk=args.vocab_chunk,
+                               unroll=args.unroll)
+                line = json.dumps(rec)
+                print(line[:400] + ("..." if len(line) > 400 else ""),
+                      flush=True)
+                if out:
+                    out.write(line + "\n")
+                    out.flush()
+                if rec["status"] == "failed":
+                    failed += 1
+                    print(rec.get("traceback", ""), file=sys.stderr)
+    if out:
+        out.close()
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

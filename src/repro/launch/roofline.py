@@ -1,0 +1,155 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh) cell, all in SECONDS (per step,
+per chip — the compiled SPMD module is the per-device program, so
+``cost_analysis`` FLOPs/bytes and the HLO collective operand sizes are
+already per-chip quantities):
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s          (197e12 bf16 v5e)
+  memory     = HLO_bytes_per_chip / HBM_bandwidth        (819e9 B/s)
+  collective = collective_operand_bytes_per_chip / ICI   (50e9 B/s/link)
+
+collective bytes are parsed from ``compiled.as_text()``: the summed
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (the convention the task
+spec fixes; ring-algorithm wire amplification is NOT applied — it is a
+constant ≈(n-1)/n ≈ 1 factor at n=16).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+from repro.launch.mesh import V5E
+
+__all__ = ["CollectiveStats", "parse_collectives", "roofline_terms",
+           "model_flops"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# a result shape: dtype[dims]{layout}?  e.g.  bf16[16,512]{1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# instruction line:  %name = <shape or (tuple)> opcode(...)
+_INSTR_RE = re.compile(
+    r"=\s+(\([^)]*\)|[\w\[\]{},]+)\s+(" + "|".join(_COLLECTIVES) +
+    r")(-start|-done)?\(")
+# replica_groups={{0,1,..},{..}}  or iota form  replica_groups=[16,16]<=[256]
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(result_str: str) -> int:
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(result_str))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))          # [n_groups, group_size]
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-device collective traffic, two conventions:
+
+    operand bytes  — the spec's convention: what each device CONTRIBUTES
+                     (all-gather: its shard; all-reduce: the full buffer;
+                     reduce-scatter: the full input; all-to-all /
+                     permute: the local buffer);
+    wire bytes     — ring-algorithm estimate of what actually crosses each
+                     device's links (all-reduce ≈ 2× buffer, etc.).
+    """
+    counts: dict[str, int]
+    bytes_by_kind: dict[str, int]       # operand-bytes convention
+    wire_bytes_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_wire_bytes(self) -> int:
+        return sum(self.wire_bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.counts.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    by_kind: dict[str, int] = {}
+    wire: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result_str, kind, startdone = m.group(1), m.group(2), m.group(3)
+        if startdone == "-done":
+            continue                     # paired with its -start
+        r = _result_bytes(result_str)    # per-device result buffer bytes
+        g = max(_group_size(line), 1)
+        if kind == "all-gather":
+            operand, w = r // max(g, 1), r * (g - 1) // max(g, 1)
+        elif kind == "all-reduce":
+            operand, w = r, 2 * r * (g - 1) // max(g, 1)
+        elif kind == "reduce-scatter":
+            operand, w = r * g, r * (g - 1)
+        elif kind == "all-to-all":
+            operand, w = r, r * (g - 1) // max(g, 1)
+        else:                            # collective-permute
+            operand, w = r, r
+        counts[kind] = counts.get(kind, 0) + 1
+        by_kind[kind] = by_kind.get(kind, 0) + operand
+        wire[kind] = wire.get(kind, 0) + w
+    return CollectiveStats(counts, by_kind, wire)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) useful-model FLOPs per step.
+    For decode shapes D = global_batch tokens (one step)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens          # forward only
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/stream
+
+
+def roofline_terms(*, flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_per_chip: float,
+                   peak=V5E) -> dict[str, float]:
+    compute_s = flops_per_chip / peak["peak_flops_bf16"]
+    memory_s = bytes_per_chip / peak["hbm_bandwidth"]
+    coll_s = coll_bytes_per_chip / peak["ici_bandwidth"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms["dominant"] = dominant
+    terms["step_s_lower_bound"] = bound
+    return terms

@@ -1,0 +1,7 @@
+"""Model zoo for the assigned architecture pool (DESIGN.md §4)."""
+
+from repro.models.registry import (  # noqa: F401
+    ModelBundle,
+    get_bundle,
+    input_specs,
+)

@@ -1,0 +1,203 @@
+"""Encoder-decoder model (seamless-m4t-large-v2).
+
+The speech frontend is a STUB per the assignment: the encoder consumes
+PRECOMPUTED frame embeddings [B, S_enc, D] (``input_specs()`` supplies
+ShapeDtypeStructs for them).  The decoder is a standard causal transformer
+with cross-attention into the encoder memory; decoder length = encoder
+length / cfg.dec_len_ratio (speech→text, DESIGN.md §4).
+
+Decode cells carry {self-attn KV cache of S_ctx} + a FIXED 4096-frame
+encoder memory (the paper-pool shape definition for enc-dec decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.models import scanctl
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ShardingPlan, make_plan
+from repro.models import layers as L
+from repro.models.lm import (_stack_init, chunked_xent, full_logits)
+
+Params = dict[str, Any]
+
+DECODE_MEMORY_FRAMES = 4096  # fixed cross-attention memory at decode time
+
+
+def _init_enc_layer(cfg: ModelConfig, key, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": L.init_norm(cfg, cfg.d_model, dtype),
+        "attn": L.init_attention(cfg, ks[0], cfg.d_model, dtype),
+        "norm2": L.init_norm(cfg, cfg.d_model, dtype),
+        "mlp": L.init_mlp(cfg, ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(cfg: ModelConfig, key, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": L.init_norm(cfg, cfg.d_model, dtype),
+        "attn": L.init_attention(cfg, ks[0], cfg.d_model, dtype),
+        "norm_x": L.init_norm(cfg, cfg.d_model, dtype),
+        "xattn": L.init_attention(cfg, ks[1], cfg.d_model, dtype),
+        "norm2": L.init_norm(cfg, cfg.d_model, dtype),
+        "mlp": L.init_mlp(cfg, ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec(cfg: ModelConfig, key, *, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_padded, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "enc_blocks": _stack_init(
+            partial(_init_enc_layer, cfg, dtype=dtype), ks[1],
+            cfg.encoder_layers),
+        "dec_blocks": _stack_init(
+            partial(_init_dec_layer, cfg, dtype=dtype), ks[2],
+            cfg.num_layers),
+        "enc_norm": L.init_norm(cfg, cfg.d_model, dtype),
+        "final_norm": L.init_norm(cfg, cfg.d_model, dtype),
+        "lm_head": (jax.random.normal(ks[3], (cfg.d_model, cfg.vocab_padded),
+                                      jnp.float32)
+                    / np.sqrt(cfg.d_model)).astype(dtype),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array,
+           *, splan: ShardingPlan) -> jax.Array:
+    """frames [B, S_enc, D] (stub embeddings) -> memory [B, S_enc, D]."""
+    h = L.shard(frames.astype(params["embed"].dtype), splan.hidden,
+                splan.mesh)
+    S_enc = h.shape[1]
+    positions = jnp.arange(S_enc, dtype=jnp.int32)
+    spec = L.AttnSpec(use_rope=True, causal=False)
+
+    def body(hh, p):
+        n1 = L.apply_norm(cfg, p["norm1"], hh)
+        hh = hh + L.attention_forward(cfg, p["attn"], n1, spec, splan=splan,
+                                      positions=positions)
+        n2 = L.apply_norm(cfg, p["norm2"], hh)
+        hh = L.shard(hh + L.apply_mlp(cfg, p["mlp"], n2), splan.hidden,
+                     splan.mesh)
+        return hh, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = scanctl.scan(body_fn, h, params["enc_blocks"])
+    return L.apply_norm(cfg, params["enc_norm"], h)
+
+
+def _decoder(cfg: ModelConfig, params: Params, h: jax.Array,
+             memory: jax.Array, splan: ShardingPlan, *, mode: str,
+             caches=None):
+    S_dec = h.shape[1]
+    positions = jnp.arange(S_dec, dtype=jnp.int32)
+    self_spec = L.AttnSpec(use_rope=True, causal=True)
+    cross_spec = L.AttnSpec(use_rope=False, causal=False, cross=True)
+    mem_positions = jnp.arange(memory.shape[1], dtype=jnp.int32)
+    decode = mode == "decode"
+    collect = mode == "prefill"
+    index = caches["index"] if decode else None
+
+    def body(carry, xs):
+        hh = carry
+        p = xs["params"]
+        new_cache = {}
+        n1 = L.apply_norm(cfg, p["norm1"], hh)
+        if decode:
+            a, nc = L.attention_decode(
+                cfg, p["attn"], n1, {**xs["caches"], "index": index},
+                self_spec, splan=splan)
+            new_cache = {"k": nc["k"], "v": nc["v"]}
+        elif collect:
+            a, nc = L.attention_forward_with_cache(
+                cfg, p["attn"], n1, self_spec, splan=splan,
+                positions=positions)
+            new_cache = nc
+        else:
+            a = L.attention_forward(cfg, p["attn"], n1, self_spec,
+                                    splan=splan, positions=positions)
+        hh = hh + a
+        nx = L.apply_norm(cfg, p["norm_x"], hh)
+        x = L.attention_forward(cfg, p["xattn"], nx, cross_spec, splan=splan,
+                                positions=positions, kv_x=memory,
+                                kv_positions=mem_positions)
+        hh = hh + x
+        n2 = L.apply_norm(cfg, p["norm2"], hh)
+        hh = hh + L.apply_mlp(cfg, p["mlp"], n2)
+        hs = splan.decode_hidden if decode else splan.hidden
+        hh = L.shard(hh, hs, splan.mesh)
+        return hh, (new_cache if (decode or collect) else None)
+
+    body_fn = jax.checkpoint(body) if (cfg.remat and mode == "train") \
+        else body
+    xs: dict[str, Any] = {"params": params["dec_blocks"]}
+    if decode:
+        xs["caches"] = caches["self"]
+    h, ys = scanctl.scan(body_fn, h, xs)
+    return h, ys
+
+
+def encdec_loss(cfg: ModelConfig, params: Params, frames: jax.Array,
+                dec_tokens: jax.Array, labels: jax.Array,
+                *, splan: ShardingPlan | None = None,
+                vocab_chunk: int = 16_384) -> jax.Array:
+    splan = splan or make_plan(cfg, None)
+    memory = encode(cfg, params, frames, splan=splan)
+    h = params["embed"][dec_tokens]
+    h = L.shard(h, splan.hidden, splan.mesh)
+    h, _ = _decoder(cfg, params, h, memory, splan, mode="train")
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    return chunked_xent(h, params["lm_head"], labels,
+                        vocab_chunk=vocab_chunk)
+
+
+def encdec_prefill(cfg: ModelConfig, params: Params, frames: jax.Array,
+                   dec_tokens: jax.Array,
+                   *, splan: ShardingPlan | None = None):
+    """Returns (last-token logits, caches {self, memory, index})."""
+    splan = splan or make_plan(cfg, None)
+    memory = encode(cfg, params, frames, splan=splan)
+    h = params["embed"][dec_tokens]
+    h = L.shard(h, splan.hidden, splan.mesh)
+    h, self_caches = _decoder(cfg, params, h, memory, splan, mode="prefill")
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = full_logits(cfg, params, h[:, -1:])[:, 0]
+    return logits, {"self": self_caches, "memory": memory,
+                    "index": jnp.int32(dec_tokens.shape[1])}
+
+
+def encdec_decode(cfg: ModelConfig, params: Params, caches: Params,
+                  token: jax.Array, *, splan: ShardingPlan | None = None):
+    splan = splan or make_plan(cfg, None)
+    h = params["embed"][token]
+    h = L.shard(h, splan.decode_hidden, splan.mesh)
+    h, new_self = _decoder(cfg, params, h, caches["memory"], splan,
+                           mode="decode", caches=caches)
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = full_logits(cfg, params, h)[:, 0]
+    return logits, {"self": new_self, "memory": caches["memory"],
+                    "index": caches["index"] + 1}
+
+
+def init_encdec_caches(cfg: ModelConfig, batch: int, ctx: int,
+                       *, mem_frames: int = DECODE_MEMORY_FRAMES,
+                       dtype=jnp.bfloat16) -> Params:
+    KV, dh = cfg.num_kv_heads, cfg.head_dim
+    nL = cfg.num_layers
+    return {
+        "self": {
+            "k": jnp.zeros((nL, batch, ctx, KV, dh), dtype),
+            "v": jnp.zeros((nL, batch, ctx, KV, dh), dtype),
+        },
+        "memory": jnp.zeros((batch, mem_frames, cfg.d_model), dtype),
+        "index": jnp.int32(0),
+    }

@@ -1,0 +1,463 @@
+"""Decoder-only LM assembly for the architecture pool.
+
+Covers five families through one scan-over-blocks backbone:
+
+  dense / vlm   attn + MLP every layer (yi, olmo, qwen2, minitron, chameleon)
+  moe           llama4 scout/maverick: iRoPE (3 chunked-local RoPE layers +
+                1 global NoPE per period-4 block), MoE every / alternating
+                layers with top-1 routing + shared expert
+  ssm           mamba2: every layer an SSD block, no attention, no MLP
+  hybrid        zamba2: 6 Mamba2 layers per block + ONE SHARED attention
+                block (on concat(hidden, embed0), per-block LoRA deltas)
+
+The layer pattern within one period is a static list of ``LayerPlan``s; the
+backbone is ``lax.scan`` over ``num_blocks`` stacked param pytrees (compact
+HLO — one block body regardless of depth — which is what keeps the 40-cell
+dry-run compile tractable).  ``cfg.remat`` wraps the block body in
+``jax.checkpoint`` for training.
+
+Three entry points (the dry-run lowers exactly these):
+  lm_loss     train forward + chunked-vocab cross-entropy (never
+              materializes [B, S, V] logits)
+  lm_prefill  builds the stacked KV/SSD caches, returns last-token logits
+  lm_decode   one-token step against the caches (flash-decoding sharding
+              comes from the ShardingPlan's decode specs)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.models import scanctl
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ShardingPlan, make_plan
+from repro.models import layers as L
+from repro.models import ssd as S
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# layer pattern
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    kind: str                 # "attn" | "ssm"
+    use_moe: bool = False
+    attn: L.AttnSpec | None = None
+
+
+def make_layer_plans(cfg: ModelConfig) -> list[LayerPlan]:
+    """Static per-period-position wiring."""
+    period = cfg.block_period
+    plans = []
+    for i in range(period):
+        if cfg.ssm_layers:
+            plans.append(LayerPlan(kind="ssm"))
+            continue
+        is_global = cfg.global_every > 0 and (i + 1) % cfg.global_every == 0
+        window = 0 if is_global else cfg.attn_window
+        use_rope = cfg.pos_type != "nope" and not (
+            cfg.pos_type == "irope" and is_global)
+        use_moe = (cfg.num_experts > 0
+                   and (i % cfg.moe_every) == (cfg.moe_every - 1))
+        plans.append(LayerPlan(
+            kind="attn", use_moe=use_moe,
+            attn=L.AttnSpec(use_rope=use_rope, window=window,
+                            causal=cfg.causal)))
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _init_position(cfg: ModelConfig, plan: LayerPlan, key, dtype) -> Params:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_norm(cfg, D, dtype)}
+    if plan.kind == "ssm":
+        p["ssm"] = S.init_ssd(cfg, ks[0], dtype)
+        return p
+    p["attn"] = L.init_attention(cfg, ks[0], D, dtype)
+    p["norm2"] = L.init_norm(cfg, D, dtype)
+    if plan.use_moe:
+        p["moe"] = L.init_moe(cfg, ks[1], D, F, dtype)
+    elif F > 0:
+        p["mlp"] = L.init_mlp(cfg, ks[1], D, F, dtype)
+    return p
+
+
+def _init_shared_attn(cfg: ModelConfig, key, dtype) -> Params:
+    """Zamba2's shared block over the concat(h, embed0) 2·D stream."""
+    D2 = 2 * cfg.d_model
+    ks = jax.random.split(key, 4)
+    gelu_cfg = dataclasses.replace(cfg, mlp_type="gelu")
+    return {
+        "norm1": L.init_norm(cfg, D2, dtype),
+        "attn": L.init_attention(cfg, ks[0], D2, dtype, d_out=cfg.d_model),
+        "norm2": L.init_norm(cfg, D2, dtype),
+        "mlp": {"wi": (jax.random.normal(ks[1], (D2, cfg.d_ff), jnp.float32)
+                       / np.sqrt(D2)).astype(dtype),
+                "wo": (jax.random.normal(ks[2], (cfg.d_ff, cfg.d_model),
+                                         jnp.float32)
+                       / np.sqrt(cfg.d_ff)).astype(dtype)},
+        "_gelu": None,  # marker; apply uses gelu_cfg
+    }
+
+
+def _init_lora(cfg: ModelConfig, key, dtype) -> Params:
+    D2, r = 2 * cfg.d_model, cfg.shared_attn_lora_rank
+    H, dh = cfg.num_heads, cfg.head_dim
+    ka, kb = jax.random.split(key)
+    return {
+        "a": (jax.random.normal(ka, (D2, r), jnp.float32) / np.sqrt(D2)
+              ).astype(dtype),
+        "b": jnp.zeros((r, H * dh), dtype),
+    }
+
+
+def init_lm(cfg: ModelConfig, key, *, dtype=jnp.bfloat16) -> Params:
+    plans = make_layer_plans(cfg)
+    nB = cfg.num_blocks
+    keys = jax.random.split(key, len(plans) + 4)
+    params: Params = {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab_padded, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "final_norm": L.init_norm(cfg, cfg.d_model, dtype),
+        "blocks": {},
+    }
+    for i, plan in enumerate(plans):
+        params["blocks"][f"p{i}"] = _stack_init(
+            partial(_init_position, cfg, plan, dtype=dtype), keys[i], nB)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            keys[-2], (cfg.d_model, cfg.vocab_padded), jnp.float32)
+            / np.sqrt(cfg.d_model)).astype(dtype)
+    if cfg.shared_attn_every:
+        params["shared_attn"] = _init_shared_attn(cfg, keys[-3], dtype)
+        params["shared_attn"].pop("_gelu")
+        params["lora"] = _stack_init(
+            partial(_init_lora, cfg, dtype=dtype), keys[-4], nB)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_shared_attn(cfg: ModelConfig, shared: Params, lora: Params,
+                       h: jax.Array, e0: jax.Array, splan: ShardingPlan,
+                       positions, *, decode_cache=None, collect=False,
+                       ctx=None):
+    cat = jnp.concatenate([h, e0], axis=-1)
+    n1 = L.apply_norm(cfg, shared["norm1"], cat)
+    attn_p = dict(shared["attn"])
+    attn_p["wq"] = attn_p["wq"] + (lora["a"] @ lora["b"]).astype(
+        attn_p["wq"].dtype)
+    spec = L.AttnSpec(use_rope=True, causal=True)
+    if decode_cache is not None:
+        a, new_cache = L.attention_decode(cfg, attn_p, n1, decode_cache,
+                                          spec, splan=splan)
+    elif collect:
+        a, new_cache = L.attention_forward_with_cache(
+            cfg, attn_p, n1, spec, splan=splan, positions=positions,
+            ctx=ctx)
+    else:
+        a, new_cache = L.attention_forward(
+            cfg, attn_p, n1, spec, splan=splan, positions=positions), None
+    n2 = L.apply_norm(cfg, shared["norm2"], cat)
+    gelu_cfg = dataclasses.replace(cfg, mlp_type="gelu")
+    m = L.apply_mlp(gelu_cfg, shared["mlp"], n2)
+    return h + a + m, new_cache
+
+
+def _apply_position(cfg: ModelConfig, plan: LayerPlan, p: Params,
+                    h: jax.Array, splan: ShardingPlan, positions,
+                    *, cache=None, decode=False, ctx=None):
+    """One layer (train/prefill: cache=None or prefill-collect; decode:
+    cache is this layer's cache).  Returns (h, new_cache_or_None)."""
+    mesh = splan.mesh
+    new_cache = None
+    if plan.kind == "ssm":
+        n1 = L.apply_norm(cfg, p["norm1"], h)
+        n1 = L.shard(n1, splan.hidden, mesh)
+        if decode:
+            y, new_cache = S.ssd_decode(cfg, p["ssm"], n1, cache)
+        elif cache == "collect":
+            y, new_cache = S.ssd_forward_with_cache(cfg, p["ssm"], n1,
+                                                    splan=splan)
+        else:
+            y = S.ssd_forward(cfg, p["ssm"], n1, splan=splan)
+        h = h + y
+        return L.shard(h, splan.hidden if not decode else splan.decode_hidden,
+                       mesh), new_cache
+
+    n1 = L.apply_norm(cfg, p["norm1"], h)
+    if decode:
+        a, new_cache = L.attention_decode(cfg, p["attn"], n1, cache,
+                                          plan.attn, splan=splan)
+    elif cache == "collect":
+        a, new_cache = L.attention_forward_with_cache(
+            cfg, p["attn"], n1, plan.attn, splan=splan, positions=positions,
+            ctx=ctx)
+    else:
+        a = L.attention_forward(cfg, p["attn"], n1, plan.attn, splan=splan,
+                                positions=positions)
+    h = h + a
+    hs = splan.decode_hidden if decode else splan.hidden
+    h = L.shard(h, hs, mesh)
+    n2 = L.apply_norm(cfg, p["norm2"], h)
+    if plan.use_moe:
+        m = (L.moe_decode(cfg, p["moe"], n2, splan=splan) if decode
+             else L.apply_moe(cfg, p["moe"], n2, splan=splan))
+    elif cfg.d_ff > 0:
+        m = L.apply_mlp(cfg, p["mlp"], n2)
+    else:
+        m = 0.0
+    h = L.shard(h + m, hs, mesh)
+    return h, new_cache
+
+
+def _remat(cfg: ModelConfig, fn):
+    """Activation-checkpoint policy (hillclimb knob, §Perf):
+    full  recompute everything in backward (min memory, +1 fwd of FLOPs)
+    dots  save matmul outputs, recompute elementwise (the usual sweet
+          spot: removes most recompute FLOPs at modest memory)
+    none  store everything (max memory, no recompute)
+    """
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _backbone(cfg: ModelConfig, params: Params, h: jax.Array,
+              splan: ShardingPlan, positions, *, mode: str,
+              caches: Params | None = None, ctx: int | None = None):
+    """mode: train | prefill | decode.  Returns (h, new_caches | None)."""
+    plans = make_layer_plans(cfg)
+    e0 = h if cfg.shared_attn_every else None
+    collect = mode == "prefill"
+    decode = mode == "decode"
+    index = caches["index"] if decode else None   # scalar, closure-captured
+
+    def block(carry, xs):
+        hh = carry
+        p_block = xs["params"]
+        c_block = xs.get("caches")
+        new_caches = {}
+        if cfg.shared_attn_every:
+            dc = ({**c_block["shared"], "index": index} if decode else None)
+            hh, nc = _apply_shared_attn(cfg, params["shared_attn"],
+                                        xs["lora"], hh, e0, splan, positions,
+                                        decode_cache=dc, collect=collect,
+                                        ctx=ctx)
+            if nc is not None:
+                new_caches["shared"] = {"k": nc["k"], "v": nc["v"]}
+        for i, plan in enumerate(plans):
+            if decode:
+                c = c_block[f"p{i}"]
+                if plan.kind == "attn":
+                    c = {**c, "index": index}
+            else:
+                c = "collect" if collect else None
+            hh, nc = _apply_position(cfg, plan, p_block[f"p{i}"], hh, splan,
+                                     positions, cache=c, decode=decode,
+                                     ctx=ctx)
+            if nc is not None:
+                new_caches[f"p{i}"] = ({"k": nc["k"], "v": nc["v"]}
+                                       if plan.kind == "attn" else nc)
+        return hh, (new_caches if (decode or collect) else None)
+
+    body = block
+    if cfg.remat and mode == "train":
+        body = _remat(cfg, block)
+
+    xs: dict[str, Any] = {"params": params["blocks"]}
+    if cfg.shared_attn_every:
+        xs["lora"] = params["lora"]
+    if decode:
+        xs["caches"] = {k: v for k, v in caches.items() if k != "index"}
+
+    h, ys = scanctl.scan(body, h, xs)
+    return h, ys
+
+
+# ---------------------------------------------------------------------------
+# heads + losses
+# ---------------------------------------------------------------------------
+
+
+def _lm_head_weight(cfg: ModelConfig, params: Params) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_xent(h: jax.Array, w: jax.Array, labels: jax.Array,
+                 *, vocab_chunk: int = 16_384) -> jax.Array:
+    """Cross-entropy without materializing [B, S, V] logits.
+
+    h [B, S, D]; w [D, V]; labels [B, S] int32 (-1 = pad).  Scans over V
+    chunks with a running (max, sumexp, target-logit) triple; the body is
+    rematerialized so backward recomputes each chunk's logits.
+    """
+    B, Sq, D = h.shape
+    V = w.shape[1]
+    nc = -(-V // vocab_chunk)
+    pad = nc * vocab_chunk - V
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    wc = w.reshape(D, nc, vocab_chunk).transpose(1, 0, 2)   # [nc, D, vc]
+    labels_safe = jnp.maximum(labels, 0)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        m, s, tgt = carry
+        w_chunk, c = xs
+        logits = jnp.einsum("bsd,dv->bsv", h, w_chunk,
+                            preferred_element_type=jnp.float32)
+        if pad:  # mask the padded vocab tail in the LAST chunk
+            vmask = (c * vocab_chunk + jnp.arange(vocab_chunk)) < V
+            logits = jnp.where(vmask[None, None], logits, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[..., None]), axis=-1)
+        idx = labels_safe - c * vocab_chunk
+        inb = (idx >= 0) & (idx < vocab_chunk)
+        picked = jnp.take_along_axis(
+            logits, jnp.clip(idx, 0, vocab_chunk - 1)[..., None], -1)[..., 0]
+        tgt = tgt + jnp.where(inb, picked, 0.0)
+        return (m_new, s, tgt), None
+
+    m0 = jnp.full((B, Sq), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((B, Sq), jnp.float32)
+    t0 = jnp.zeros((B, Sq), jnp.float32)
+    (m, s, tgt), _ = scanctl.scan(
+        body, (m0, s0, t0), (wc, jnp.arange(nc)))
+    nll = (m + jnp.log(jnp.maximum(s, 1e-30))) - tgt
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def full_logits(cfg: ModelConfig, params: Params, h: jax.Array) -> jax.Array:
+    """[B, S, D] -> [B, S, Vp] — only for small S (last-token / smoke)."""
+    w = _lm_head_weight(cfg, params)
+    return jnp.einsum("bsd,dv->bsv", h, w,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def lm_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array,
+              *, splan: ShardingPlan | None = None) -> jax.Array:
+    """Train-mode backbone: tokens [B, S] -> normed hidden [B, S, D]."""
+    splan = splan or make_plan(cfg, None)
+    B, Sq = tokens.shape
+    h = params["embed"][tokens]
+    h = L.shard(h, splan.hidden, splan.mesh)
+    positions = jnp.arange(Sq, dtype=jnp.int32)
+    h, _ = _backbone(cfg, params, h, splan, positions, mode="train")
+    return L.apply_norm(cfg, params["final_norm"], h)
+
+
+def lm_loss(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            labels: jax.Array, *, splan: ShardingPlan | None = None,
+            vocab_chunk: int = 16_384) -> jax.Array:
+    h = lm_hidden(cfg, params, tokens, splan=splan)
+    return chunked_xent(h, _lm_head_weight(cfg, params), labels,
+                        vocab_chunk=vocab_chunk)
+
+
+def lm_prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+               *, splan: ShardingPlan | None = None,
+               ctx: int | None = None):
+    """tokens [B, S] -> (last-token logits [B, Vp], caches).
+    ``ctx``: total cache positions (> S for decode appends; serving)."""
+    splan = splan or make_plan(cfg, None)
+    B, Sq = tokens.shape
+    h = params["embed"][tokens]
+    h = L.shard(h, splan.hidden, splan.mesh)
+    positions = jnp.arange(Sq, dtype=jnp.int32)
+    h, caches = _backbone(cfg, params, h, splan, positions, mode="prefill",
+                          ctx=ctx)
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = full_logits(cfg, params, h[:, -1:])[:, 0]
+    caches = dict(caches)
+    caches["index"] = jnp.int32(Sq)
+    return logits, caches
+
+
+def lm_decode(cfg: ModelConfig, params: Params, caches: Params,
+              token: jax.Array, *, splan: ShardingPlan | None = None):
+    """token [B, 1] -> (logits [B, Vp], new caches)."""
+    splan = splan or make_plan(cfg, None)
+    h = params["embed"][token]
+    h = L.shard(h, splan.decode_hidden, splan.mesh)
+    h, new_caches = _backbone(cfg, params, h, splan, None, mode="decode",
+                              caches=caches)
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = full_logits(cfg, params, h)[:, 0]
+    out = dict(new_caches)
+    out["index"] = caches["index"] + 1
+    return logits, out
+
+
+# ---------------------------------------------------------------------------
+# cache construction (decode dry-run input specs use the SHAPES of these)
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, ctx: int,
+                *, dtype=jnp.bfloat16) -> Params:
+    """Zero caches for a [batch] decode stream with ``ctx`` total positions.
+
+    Attention layers: [nB, B, Sc, KV, dh] stacked K/V (windowed layers get
+    the full ctx too — window masking happens at attend time; the memory
+    saving of ring caches is a recorded hillclimb option).
+    SSM layers: O(1) conv + state caches (the family's 'KV cache').
+    """
+    plans = make_layer_plans(cfg)
+    nB = cfg.num_blocks
+    KV, dh = cfg.num_kv_heads, cfg.head_dim
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (nB,) + x.shape), tree)
+
+    caches: Params = {}
+    for i, plan in enumerate(plans):
+        if plan.kind == "ssm":
+            caches[f"p{i}"] = stack(S.init_ssd_cache(cfg, batch, dtype))
+        else:
+            caches[f"p{i}"] = stack({
+                "k": jnp.zeros((batch, ctx, KV, dh), dtype),
+                "v": jnp.zeros((batch, ctx, KV, dh), dtype),
+            })
+    if cfg.shared_attn_every:
+        caches["shared"] = stack({
+            "k": jnp.zeros((batch, ctx, KV, dh), dtype),
+            "v": jnp.zeros((batch, ctx, KV, dh), dtype),
+        })
+    caches["index"] = jnp.int32(0)
+    return caches

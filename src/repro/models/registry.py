@@ -1,0 +1,110 @@
+"""Registry: one ``ModelBundle`` of entry points per architecture family.
+
+The bundle's functions are what the trainer, the serving engine, and the
+dry-run lower; ``input_specs`` builds the ShapeDtypeStruct stand-ins for
+every (arch × shape) cell — weak-type-correct, shardable, no allocation.
+
+Modality frontends are STUBS per the assignment: ``seamless`` takes
+precomputed frame embeddings, ``chameleon`` takes already-VQ-quantized
+token ids from the unified vocab.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import ShardingPlan, make_plan
+from repro.models import encdec as ED
+from repro.models import lm as LM
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    """Family-dispatched entry points, all (cfg, params, ..., splan)."""
+    init: Callable[..., Params]
+    loss: Callable[..., jax.Array]            # loss(cfg, params, batch, splan)
+    prefill: Callable[..., tuple]             # (cfg, params, batch, splan)
+    decode: Callable[..., tuple]              # (cfg, params, caches, tok, splan)
+    init_caches: Callable[..., Params]
+
+
+def _lm_loss(cfg, params, batch, splan):
+    return LM.lm_loss(cfg, params, batch["tokens"], batch["labels"],
+                      splan=splan)
+
+
+def _lm_prefill(cfg, params, batch, splan):
+    return LM.lm_prefill(cfg, params, batch["tokens"], splan=splan)
+
+
+def _lm_decode(cfg, params, caches, token, splan):
+    return LM.lm_decode(cfg, params, caches, token, splan=splan)
+
+
+def _ed_loss(cfg, params, batch, splan):
+    return ED.encdec_loss(cfg, params, batch["frames"], batch["tokens"],
+                          batch["labels"], splan=splan)
+
+
+def _ed_prefill(cfg, params, batch, splan):
+    return ED.encdec_prefill(cfg, params, batch["frames"], batch["tokens"],
+                             splan=splan)
+
+
+def _ed_decode(cfg, params, caches, token, splan):
+    return ED.encdec_decode(cfg, params, caches, token, splan=splan)
+
+
+_LM_BUNDLE = ModelBundle(init=LM.init_lm, loss=_lm_loss, prefill=_lm_prefill,
+                         decode=_lm_decode, init_caches=LM.init_caches)
+_ED_BUNDLE = ModelBundle(init=ED.init_encdec, loss=_ed_loss,
+                         prefill=_ed_prefill, decode=_ed_decode,
+                         init_caches=ED.init_encdec_caches)
+
+
+def get_bundle(cfg: ModelConfig) -> ModelBundle:
+    return _ED_BUNDLE if cfg.encoder_layers else _LM_BUNDLE
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                *, dtype=jnp.bfloat16) -> dict[str, Any]:
+    """Inputs for the step the cell lowers (train/prefill: the batch;
+    decode: {token, caches-with-ctx=seq_len})."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if cfg.encoder_layers:  # enc-dec: frames + decoder tokens (S_dec = S/r)
+        Sd = max(S // cfg.dec_len_ratio, 1)
+        if shape.kind == "train":
+            return {"frames": sds((B, S, cfg.d_model), dtype),
+                    "tokens": sds((B, Sd), i32),
+                    "labels": sds((B, Sd), i32)}
+        if shape.kind == "prefill":
+            return {"frames": sds((B, S, cfg.d_model), dtype),
+                    "tokens": sds((B, Sd), i32)}
+        # decode: self cache of S positions + fixed 4096-frame memory
+        caches = jax.eval_shape(
+            lambda: ED.init_encdec_caches(cfg, B, S, dtype=dtype))
+        return {"token": sds((B, 1), i32), "caches": caches}
+
+    if shape.kind == "train":
+        return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+    if shape.kind == "prefill":
+        return {"tokens": sds((B, S), i32)}
+    caches = jax.eval_shape(lambda: LM.init_caches(cfg, B, S, dtype=dtype))
+    return {"token": sds((B, 1), i32), "caches": caches}

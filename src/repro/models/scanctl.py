@@ -1,0 +1,21 @@
+"""Scan control for the dry-run's cost accounting.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE, not × trip count,
+so a scan-over-layers model under-reports FLOPs/bytes/collectives by
+~num_layers.  The dry-run therefore lowers with ``UNROLL=True`` (every
+``lax.scan`` fully unrolled: exact HLO costs, larger compile) for the
+§Roofline table, and with the default rolled scan for the fits-in-HBM
+memory analysis (the production configuration).  Production code never
+sets this.
+"""
+
+from __future__ import annotations
+
+import jax
+
+UNROLL = False
+
+
+def scan(body, init, xs, **kw):
+    return jax.lax.scan(body, init, xs,
+                        unroll=True if UNROLL else 1, **kw)

@@ -1,0 +1,228 @@
+"""Mamba2 SSD (state-space duality) block — chunked scan + O(1) decode.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): within a chunk
+of length Q the recurrence is computed as a masked quadratic form (MXU
+matmuls); across chunks a tiny recurrent state [H, P, N] is carried by a
+``lax.scan``.  This is the TPU-friendly middle point between the pure
+recurrence (serial, VPU-bound) and the pure quadratic form (O(S²)).
+
+Sharding (DESIGN.md §5): SSD heads are independent, so the head axis H is
+the natural TPU 'model'-axis shard (80 = 2·2560/64 divides 16 for mamba2;
+d_inner/ssm channels shard with it).  The sequence axis stays UNSHARDED for
+SSM layers — the chunk scan is along S — which is why hybrid archs reshard
+activations between attention (context-parallel) and SSM (head-parallel)
+layers only when both exist.
+
+Decode carries {conv_state [B, W-1, C_conv], ssd_state [B, H, P, N]} — the
+"KV cache" of this family is O(1) in sequence length (noted in §Roofline).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.models import scanctl
+
+from repro.configs.base import ModelConfig
+
+Params = dict[str, Any]
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    s = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def init_ssd(cfg: ModelConfig, key, dtype) -> Params:
+    D = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    W = cfg.conv_width
+    conv_ch = di + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection -> [z(di), xBC(di + 2N), dt(H)]
+        "in_proj": _dense_init(ks[0], (D, 2 * di + 2 * N + H), dtype),
+        "conv_w": _dense_init(ks[1], (W, conv_ch), dtype, scale=1.0 / W),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": _dense_init(ks[2], (di, D), dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di:di + di + 2 * N]
+    dt = proj[..., di + di + 2 * N:]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    """Mamba2's RMSNorm(y * silu(z)) output gate."""
+    g = (y * jax.nn.silu(z)).astype(jnp.float32)
+    g = g * jax.lax.rsqrt(jnp.mean(g * g, -1, keepdims=True) + 1e-6)
+    return (g * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x [..., Q] -> [..., Q, Q] with out[i, j] = sum_{j < k <= i} x[k],
+    -inf above the diagonal (the 1-SS mask of the SSD paper)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(cfg: ModelConfig, p: Params, x: jax.Array,
+                *, chunk: int | None = None, return_cache: bool = False,
+                splan=None):
+    """Full-sequence SSD. x [B, S, D] -> [B, S, D]. S % chunk == 0 required
+    (callers pad); the chunk scan carries the [B, H, P, N] state.
+    ``return_cache`` additionally emits the decode cache (prefill).
+
+    ``splan`` pins the HEAD axis to the mesh 'model' axis through the whole
+    chunk computation — without the constraints XLA replicates H and every
+    chip pays 16× the L-matrix traffic (§Perf mamba2 iteration 3)."""
+    B, S_true, D = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P_ = cfg.ssm_headdim
+    Q = min(chunk or cfg.ssm_chunk, S_true)
+    S = -(-S_true // Q) * Q                       # pad S up to a Q multiple
+    if S != S_true:
+        x = jnp.pad(x, ((0, 0), (0, S - S_true), (0, 0)))
+    nC = S // Q
+
+    proj = x @ p["in_proj"]
+    z, xBC_raw, dt = _split_proj(cfg, proj)
+    if S != S_true:  # pad positions: dt=0 => no state update, no output
+        smask = (jnp.arange(S) < S_true)[None, :, None]
+        dt = jnp.where(smask, dt, -1e9)           # softplus(-1e9) == 0
+
+    # causal depthwise conv over S (width W), SiLU
+    W = cfg.conv_width
+    pad = jnp.pad(xBC_raw, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S] * p["conv_w"][i] for i in range(W))
+    xBC = jax.nn.silu(conv + p["conv_b"])
+
+    xs = xBC[..., :di].reshape(B, S, H, P_)
+    B_ = xBC[..., di:di + N]                               # [B, S, N] (1 group)
+    C_ = xBC[..., di + N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, S, H]
+    A = -jnp.exp(p["A_log"])                               # [H]
+    dA = dt * A                                            # [B, S, H]
+
+    if splan is not None and splan.mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as Pspec
+        da = (splan.data_axes if len(splan.data_axes) > 1
+              else (splan.data_axes[0] if splan.data_axes else None))
+        model = splan.model_axis
+        wsc = jax.lax.with_sharding_constraint
+        mesh = splan.mesh
+        xs = wsc(xs, NamedSharding(mesh, Pspec(da, None, model, None)))
+        z = wsc(z, NamedSharding(mesh, Pspec(da, None, model)))
+        B_ = wsc(B_, NamedSharding(mesh, Pspec(da, None, None)))
+        C_ = wsc(C_, NamedSharding(mesh, Pspec(da, None, None)))
+        dA = wsc(dA, NamedSharding(mesh, Pspec(da, None, model)))
+
+    # chunked layout [nC, B, Q, ...] for the scan
+    def chunked(t, tail):
+        return t.reshape((B, nC, Q) + tail).transpose((1, 0, 2) +
+                                                      tuple(range(3, 3 + len(tail))))
+    xs_c = chunked(xs * dt[..., None].astype(xs.dtype), (H, P_))
+    x_raw_c = chunked(xs, (H, P_))
+    B_c = chunked(B_, (N,))
+    C_c = chunked(C_, (N,))
+    dA_c = chunked(dA, (H,))
+
+    def body(state, inp):
+        xdt, xraw, Bj, Cj, dAj = inp                       # per-chunk
+        # within-chunk quadratic term
+        L = jnp.exp(_segsum(dAj.transpose(0, 2, 1)))       # [B, H, Q, Q]
+        scores = jnp.einsum("bqn,bsn->bqs", Cj, Bj,
+                            preferred_element_type=jnp.float32)
+        M = scores[:, None] * L                            # [B, H, Q, Q]
+        y_diag = jnp.einsum("bhqs,bshp->bqhp", M.astype(xdt.dtype), xdt,
+                            preferred_element_type=jnp.float32)
+        # contribution of the carried state
+        cum = jnp.cumsum(dAj, axis=1)                      # [B, Q, H]
+        y_off = jnp.einsum("bqn,bhpn,bqh->bqhp", Cj, state,
+                           jnp.exp(cum).astype(Cj.dtype),
+                           preferred_element_type=jnp.float32)
+        # new chunk state
+        decay = jnp.exp(cum[:, -1:, :] - cum)              # [B, Q, H]
+        new_state = jnp.einsum("bsn,bsh,bshp->bhpn", Bj,
+                               decay.astype(Bj.dtype), xdt,
+                               preferred_element_type=jnp.float32)
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None] + new_state
+        y = (y_diag + y_off).astype(xraw.dtype) + \
+            xraw * p["D"][None, None, :, None].astype(xraw.dtype)
+        return state, y
+
+    state0 = jnp.zeros((B, H, P_, N), jnp.float32)
+    final_state, ys = scanctl.scan(body, state0,
+                                   (xs_c, x_raw_c, B_c, C_c, dA_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, di)
+    out = _gated_rmsnorm(y, z, p["norm"]) @ p["out_proj"]
+    out = out[:, :S_true]
+    if not return_cache:
+        return out
+    conv_cache = xBC_raw[:, S_true - (W - 1):S_true, :] if W > 1 else \
+        xBC_raw[:, :0, :]
+    return out, {"conv": conv_cache, "state": final_state}
+
+
+def ssd_forward_with_cache(cfg: ModelConfig, p: Params, x: jax.Array,
+                           *, chunk: int | None = None, splan=None):
+    return ssd_forward(cfg, p, x, chunk=chunk, return_cache=True,
+                       splan=splan)
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                            cfg.ssm_state), jnp.float32),
+    }
+
+
+def ssd_decode(cfg: ModelConfig, p: Params, x: jax.Array,
+               cache: dict) -> tuple[jax.Array, dict]:
+    """One-token recurrent step. x [B, 1, D]."""
+    B = x.shape[0]
+    di, N, H, P_ = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    proj = x[:, 0] @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, proj)
+
+    hist = jnp.concatenate([cache["conv"], xBC[:, None]], axis=1)  # [B, W, C]
+    conv = jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xBC_a = jax.nn.silu(conv)
+    new_conv = hist[:, 1:]
+
+    xt = xBC_a[:, :di].reshape(B, H, P_)
+    Bt = xBC_a[:, di:di + N]
+    Ct = xBC_a[:, di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # [B, H]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                           # [B, H]
+
+    state = cache["state"] * dA[:, :, None, None] + \
+        jnp.einsum("bhp,bn,bh->bhpn", xt.astype(jnp.float32), Bt,
+                   dt)
+    y = jnp.einsum("bhpn,bn->bhp", state, Ct).astype(x.dtype)
+    y = y + xt * p["D"][None, :, None].astype(xt.dtype)
+    y = y.reshape(B, di)
+    out = _gated_rmsnorm(y, z, p["norm"]) @ p["out_proj"]
+    return out[:, None], {"conv": new_conv, "state": state}

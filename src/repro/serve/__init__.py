@@ -1,0 +1,1 @@
+"""Serving layer: continuous-batching engine + forest request router."""

@@ -1,0 +1,204 @@
+"""Continuous-batching serving engine.
+
+Slot model: the decode step runs a FIXED [B_slots] batch every tick (one
+jitted program, fixed shapes — no recompilation in the steady state); each
+slot carries its own cache position (per-slot ``index`` vector, see
+layers.attention_decode).  New requests are prefetched into free slots
+between ticks via a jitted insert (dynamic_update_slice on the batch
+axis), so admission never stalls running streams — continuous batching in
+the vLLM sense, with bucketed prompt lengths bounding the number of
+prefill program shapes.
+
+The engine is per-pod and shares nothing across pods (DESIGN.md §8); the
+forest ROUTER (serve/router.py — the paper's technique, serving the
+serving stack) classifies incoming requests into latency tiers before
+admission.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ShardingPlan, make_plan
+from repro.models.registry import get_bundle
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # [P] int32
+    max_new_tokens: int = 16
+    eos_token: int = -1                # -1: never stop early
+    priority: int = 1                  # router tier (0 = interactive)
+    submitted_at: float = 0.0
+    # filled at completion:
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    first_token_at: float = 0.0
+    finished_at: float = 0.0
+
+
+def _bucket(n: int, buckets: tuple[int, ...]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Params, *,
+                 slots: int = 4, max_ctx: int = 256,
+                 prompt_buckets: tuple[int, ...] = (32, 64, 128),
+                 splan: ShardingPlan | None = None,
+                 dtype=jnp.bfloat16):
+        assert not cfg.encoder_layers, "engine serves decoder-only LMs"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_ctx = max_ctx
+        self.buckets = tuple(b for b in prompt_buckets if b < max_ctx)
+        self.splan = splan or make_plan(cfg, None)
+        self.bundle = get_bundle(cfg)
+        from repro.models import lm as LM
+        self.caches = LM.init_caches(cfg, slots, max_ctx, dtype=dtype)
+        self.caches["index"] = jnp.zeros((slots,), jnp.int32)
+        self._free = list(range(slots))
+        self._active: dict[int, Request] = {}
+        self._queue: deque[Request] = deque()
+        self._done: list[Request] = []
+        self._remaining = np.zeros(slots, np.int64)
+        self._cur_tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._uid = 0
+        self.ticks = 0
+
+        self._decode = jax.jit(
+            lambda p, c, t: self.bundle.decode(cfg, p, c, t, self.splan))
+        self._prefill = {}
+        for b in self.buckets:
+            self._prefill[b] = jax.jit(
+                partial(self._prefill_fn, prompt_len=b))
+        self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    def _prefill_fn(self, params, tokens, *, prompt_len):
+        from repro.models import lm as LM
+        logits, caches = LM.lm_prefill(self.cfg, params, tokens,
+                                       splan=self.splan, ctx=self.max_ctx)
+        return logits, caches
+
+    def _insert_fn(self, caches, cur_tokens, cache1, slot, length,
+                   first_token):
+        """Copy a batch-1 prefill cache into slot ``slot``."""
+        def one(path, big, small):
+            name = str(getattr(path[-1], "key", ""))
+            if not hasattr(big, "ndim") or big.ndim == 0 or name == "index":
+                return big
+            # batch axis is 0 for unstacked, 1 for stacked [nB, B, ...]
+            ax = 1 if big.ndim >= 3 and big.shape[1] == self.slots else 0
+            start = [0] * big.ndim
+            start[ax] = slot
+            return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                                tuple(start))
+        new = jax.tree_util.tree_map_with_path(
+            one, {k: v for k, v in caches.items() if k != "index"},
+            {k: v for k, v in cache1.items() if k != "index"})
+        new["index"] = caches["index"].at[slot].set(length)
+        cur = cur_tokens.at[slot, 0].set(first_token)
+        return new, cur
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, *, max_new_tokens: int = 16,
+               eos_token: int = -1, priority: int = 1) -> int:
+        self._uid += 1
+        req = Request(self._uid, np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, eos_token=eos_token,
+                      priority=priority, submitted_at=time.perf_counter())
+        # priority admission: interactive (0) requests jump the queue
+        if priority == 0:
+            self._queue.appendleft(req)
+        else:
+            self._queue.append(req)
+        return req.uid
+
+    def _admit_one(self, req: Request, slot: int) -> None:
+        P = len(req.prompt)
+        b = _bucket(P, self.buckets) if self.buckets else P
+        if b not in self._prefill:
+            self._prefill[b] = jax.jit(partial(self._prefill_fn,
+                                               prompt_len=b))
+        toks = np.zeros((1, b), np.int32)
+        toks[0, b - P:] = req.prompt           # left-pad into the bucket
+        logits, cache1 = self._prefill[b](self.params, jnp.asarray(toks))
+        first = int(jnp.argmax(logits[0]))
+        self.caches, self._cur_tokens = self._insert(
+            self.caches, self._cur_tokens, cache1, slot, b, first)
+        req.tokens.append(first)
+        req.first_token_at = time.perf_counter()
+        self._active[slot] = req
+        self._remaining[slot] = req.max_new_tokens - 1
+
+    def step(self) -> list[Request]:
+        """One engine tick: admit into free slots, one decode step, collect
+        finished requests.  Returns newly finished requests."""
+        while self._free and self._queue:
+            self._admit_one(self._queue.popleft(), self._free.pop())
+        if not self._active:
+            return []
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           self._cur_tokens)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._cur_tokens = nxt[:, None]
+        nxt_np = np.asarray(jax.device_get(nxt))
+        self.ticks += 1
+        finished = []
+        for slot, req in list(self._active.items()):
+            if self._remaining[slot] <= 0:
+                continue
+            tok = int(nxt_np[slot])
+            req.tokens.append(tok)
+            self._remaining[slot] -= 1
+            idx = int(jax.device_get(self.caches["index"][slot]))
+            if self._remaining[slot] <= 0 or tok == req.eos_token \
+                    or idx >= self.max_ctx - 1:
+                req.finished_at = time.perf_counter()
+                finished.append(req)
+                self._done.append(req)
+                del self._active[slot]
+                self._free.append(slot)
+        return finished
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
+        t = 0
+        while (self._queue or self._active) and t < max_ticks:
+            self.step()
+            t += 1
+        return self._done
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict[str, float]:
+        if not self._done:
+            return {}
+        lat = [r.finished_at - r.submitted_at for r in self._done]
+        ttft = [r.first_token_at - r.submitted_at for r in self._done]
+        toks = sum(len(r.tokens) for r in self._done)
+        span = max(r.finished_at for r in self._done) - \
+            min(r.submitted_at for r in self._done)
+        return {
+            "requests": len(self._done),
+            "mean_latency_s": float(np.mean(lat)),
+            "p95_latency_s": float(np.percentile(lat, 95)),
+            "mean_ttft_s": float(np.mean(ttft)),
+            "tokens": toks,
+            "tokens_per_s": toks / max(span, 1e-9),
+            "ticks": self.ticks,
+        }

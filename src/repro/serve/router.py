@@ -1,0 +1,81 @@
+"""Forest-based request router — the paper's technique serving the stack.
+
+The paper's motivating deployments put decision forests in the serving
+path (ranking, fraud gating, admission).  Here the forest routes LLM
+requests into latency tiers BEFORE admission: a RandomForest over request
+features (prompt length, requested tokens, arrival load, prompt entropy
+proxy) predicts whether the request is 'interactive' (short — jump the
+queue) or 'batch'.  The forest runs IN-PROCESS over device-resident
+features via the in-database engine (``core``/``db``) — the same
+data-locality argument the paper makes: no feature round-trip to an
+external scorer.
+
+The router's model is trained in-framework (core/train.py) on synthetic
+traces; ``examples/rank_fusion.py`` shows the full LM→forest fusion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.postprocess import predict_proba
+from repro.core.train import TrainConfig, train_forest
+
+__all__ = ["RouterConfig", "ForestRouter", "synth_router_trace"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    num_trees: int = 32
+    max_depth: int = 6
+    threshold: float = 0.5            # P(expensive) above => batch tier
+    algorithm: str = "predicated"
+
+
+FEATURES = ("prompt_len", "max_new_tokens", "queue_depth",
+            "active_slots", "mean_prompt_len_recent")
+
+
+def request_features(prompt_len: int, max_new_tokens: int,
+                     queue_depth: int, active_slots: int,
+                     mean_recent: float) -> np.ndarray:
+    return np.array([prompt_len, max_new_tokens, queue_depth,
+                     active_slots, mean_recent], np.float32)
+
+
+def synth_router_trace(n: int = 4096, seed: int = 0):
+    """Synthetic request trace with a ground-truth cost rule: a request is
+    'expensive' when its token budget dominates the current load."""
+    rng = np.random.default_rng(seed)
+    x = np.stack([
+        rng.integers(1, 512, n),          # prompt_len
+        rng.integers(1, 256, n),          # max_new_tokens
+        rng.integers(0, 64, n),           # queue_depth
+        rng.integers(0, 8, n),            # active_slots
+        rng.uniform(8, 256, n),           # mean_prompt_len_recent
+    ], axis=1).astype(np.float32)
+    cost = x[:, 0] * 0.5 + x[:, 1] * 2.0 + x[:, 2] * 1.5
+    y = (cost > np.median(cost)).astype(np.float32)
+    return x, y
+
+
+class ForestRouter:
+    def __init__(self, cfg: RouterConfig = RouterConfig(), *,
+                 forest=None, seed: int = 0):
+        self.cfg = cfg
+        if forest is None:
+            x, y = synth_router_trace(seed=seed)
+            forest = train_forest(x, y, TrainConfig(
+                model_type="randomforest", num_trees=cfg.num_trees,
+                max_depth=cfg.max_depth, seed=seed))
+        self.forest = forest
+
+    def route(self, feats: np.ndarray) -> int:
+        """[F] or [N, F] features -> tier(s): 0 interactive, 1 batch."""
+        x = jnp.asarray(np.atleast_2d(feats))
+        p = predict_proba(self.forest, x, algorithm=self.cfg.algorithm)
+        tiers = (np.asarray(p) > self.cfg.threshold).astype(int)
+        return int(tiers[0]) if feats.ndim == 1 else tiers

@@ -1,0 +1,120 @@
+"""Train step assembly: loss -> grad -> (accumulate) -> clip -> update.
+
+``make_train_step`` returns ONE jitted function over global arrays — no
+host-side Python in the step path (DESIGN.md §8).  Microbatch gradient
+accumulation runs as a ``lax.scan`` over the leading microbatch axis so
+the HLO stays compact.  Optional cross-pod gradient compression (int8 +
+error feedback) hooks in between accumulation and the optimizer — XLA's
+all-reduce then moves 4× fewer bytes over the DCN 'pod' axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import (ShardingPlan, batch_specs, make_plan,
+                                 param_specs, tree_named)
+from repro.models.registry import ModelBundle, get_bundle
+from repro.train.optimizer import Optimizer, OptimizerConfig, make_optimizer
+
+Params = Any
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Params
+    opt: Any
+    step: jax.Array
+
+    def tree(self):
+        return {"params": self.params, "opt": self.opt, "step": self.step}
+
+
+def init_state(cfg: ModelConfig, opt: Optimizer, key,
+               *, dtype=jnp.bfloat16) -> dict:
+    bundle = get_bundle(cfg)
+    params = bundle.init(cfg, key, dtype=dtype)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_shapes(cfg: ModelConfig, opt: Optimizer,
+                 *, dtype=jnp.bfloat16) -> dict:
+    """abstract state for the dry-run (no allocation)."""
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(partial(init_state, cfg, opt, dtype=dtype), key)
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer,
+                    splan: ShardingPlan, *, microbatches: int = 1,
+                    grad_compress: bool = False,
+                    vocab_chunk: int = 16_384) -> Callable:
+    """(state, batch) -> (state, metrics); pure, jit-able, mesh-aware."""
+    bundle = get_bundle(cfg)
+
+    def loss_fn(params, batch):
+        return bundle.loss(cfg, params, batch, splan)
+
+    def step_fn(state, batch):
+        params = state["params"]
+        if microbatches <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc,), l
+
+            zeros = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches) +
+                                    x.shape[1:]), batch)
+            (grads,), losses = jax.lax.scan(micro, (zeros,), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = jnp.mean(losses)
+
+        if grad_compress and splan.mesh is not None and \
+                "pod" in splan.mesh.axis_names:
+            from repro.dist.compression import compress_grads_crosspod
+            grads = compress_grads_crosspod(grads, splan.mesh)
+
+        new_params, new_opt = opt.update(grads, state["opt"], params,
+                                         state["step"])
+        metrics = {"loss": loss, "gnorm": new_opt.pop("gnorm")}
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return step_fn
+
+
+def jit_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh | None,
+                   **kw):
+    """jit with explicit in/out shardings derived from the plan."""
+    splan = make_plan(cfg, mesh)
+    step_fn = make_train_step(cfg, opt, splan, **kw)
+    if mesh is None:
+        return jax.jit(step_fn), splan
+
+    abstract = state_shapes(cfg, opt)
+    pspecs = param_specs(abstract["params"], mesh)
+    ospecs = {"params": pspecs,
+              "opt": param_specs(abstract["opt"], mesh),
+              "step": P()}
+    bspec_all = batch_specs(splan)
+    in_shardings = (tree_named(mesh, ospecs), None)
+    out_shardings = (tree_named(mesh, ospecs), None)
+    jitted = jax.jit(step_fn, in_shardings=in_shardings,
+                     out_shardings=out_shardings, donate_argnums=(0,))
+    return jitted, splan

@@ -1,0 +1,111 @@
+"""Cross-equivalence of the four inference algorithms (paper F1 axis).
+
+``naive_predict`` (per-sample while_loop — the most literal transcription
+of tree traversal) is the root oracle; every vectorized backend must match
+it bit-for-bit on the same dense forest, including NaN (missing-value)
+inputs routed by default_left.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.algorithms import ALGORITHMS, naive_predict, predict_raw
+from repro.core.forest import make_forest, pad_trees, tree_slice
+from repro.core import postprocess as post
+
+from conftest import random_forest_arrays
+
+BACKENDS = ["predicated", "compiled", "hummingbird", "quickscorer"]
+
+
+def _forest(rng, depth, T=5, F=9, seed=0):
+    fe, th, dl, lv = random_forest_arrays(rng, T=T, depth=depth, F=F,
+                                          seed=seed)
+    return make_forest(fe, th, lv, default_left=dl, n_features=F)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("depth", [1, 2, 4, 6, 8])
+def test_backend_matches_naive(rng, backend, depth):
+    forest = _forest(rng, depth, seed=depth)
+    x = rng.normal(size=(17, 9)).astype(np.float32)
+    want = naive_predict(forest, jnp.asarray(x))
+    got = predict_raw(forest, jnp.asarray(x), backend)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_nan_handling(rng, backend):
+    forest = _forest(rng, 5, seed=7)
+    x = rng.normal(size=(23, 9)).astype(np.float32)
+    x[rng.random(x.shape) < 0.3] = np.nan     # missing features
+    want = naive_predict(forest, jnp.asarray(x))
+    got = predict_raw(forest, jnp.asarray(x), backend)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_unknown_algorithm_raises(random_forest):
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        predict_raw(random_forest, jnp.zeros((1, 11)), "nope")
+
+
+# ---------------------------------------------------------------------------
+# phase 2: aggregation semantics (paper Sec. 2)
+# ---------------------------------------------------------------------------
+
+
+def test_postprocess_xgboost_sigmoid(random_forest):
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(8, 11)),
+                    jnp.float32)
+    raw = predict_raw(random_forest, x, "predicated")
+    p = post.predict_proba(random_forest, x)
+    manual = 1.0 / (1.0 + np.exp(-np.asarray(raw).sum(-1)))
+    np.testing.assert_allclose(np.asarray(p), manual, rtol=1e-5)
+    labels = post.predict_label(random_forest, x)
+    np.testing.assert_array_equal(np.asarray(labels),
+                                  (manual >= 0.5).astype(np.int32))
+
+
+def test_postprocess_rf_mean(rng):
+    import dataclasses
+    forest = _forest(rng, 3, T=4, seed=3)
+    forest = dataclasses.replace(forest, model_type="randomforest")
+    # clip leaves into [0, 1] (RF leaves are class-1 probabilities)
+    forest = dataclasses.replace(
+        forest, leaf_value=jnp.clip(forest.leaf_value, 0.0, 1.0))
+    x = jnp.asarray(rng.normal(size=(6, 9)), jnp.float32)
+    raw = predict_raw(forest, x, "predicated")
+    p = post.predict_proba(forest, x)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(raw).mean(-1),
+                               rtol=1e-5)
+
+
+def test_pad_trees_sum_invariant(rng):
+    """Padding trees (relation-centric partitioning) must not change the
+    summed raw score — pass-through trees carry zero leaves."""
+    forest = _forest(rng, 4, T=5, seed=11)
+    x = jnp.asarray(rng.normal(size=(9, 9)), jnp.float32)
+    base = np.asarray(predict_raw(forest, x, "predicated")).sum(-1)
+    padded, true_T = pad_trees(forest, 8)
+    assert padded.num_trees == 8 and true_T == 5
+    got = np.asarray(predict_raw(padded, x, "predicated")).sum(-1)
+    np.testing.assert_allclose(got, base, rtol=1e-6)
+
+
+def test_tree_slice_partition_sums_match(rng):
+    """Model partitioning: per-partition partial sums == whole-forest sum
+    (the relation-centric AGGREGATE's legality)."""
+    forest = _forest(rng, 4, T=6, seed=13)
+    x = jnp.asarray(rng.normal(size=(5, 9)), jnp.float32)
+    whole = np.asarray(predict_raw(forest, x, "predicated")).sum(-1)
+    parts = [tree_slice(forest, s, 2) for s in (0, 2, 4)]
+    partial = sum(np.asarray(predict_raw(p, x, "predicated")).sum(-1)
+                  for p in parts)
+    np.testing.assert_allclose(partial, whole, rtol=1e-6)
+
+
+def test_all_algorithms_registered():
+    assert set(ALGORITHMS) == {"naive", "predicated", "compiled",
+                               "hummingbird", "quickscorer"}

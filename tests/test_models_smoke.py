@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch at a
+REDUCED config runs one forward/train step on CPU — shapes + no NaNs.
+The FULL configs are exercised only via the dry-run (no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, reduced
+from repro.dist.sharding import make_plan
+from repro.models import get_bundle, input_specs
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.trainer import init_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=64, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+    if cfg.encoder_layers:
+        Sd = S // cfg.dec_len_ratio
+        return {"frames": rng.normal(size=(B, S, cfg.d_model)
+                                     ).astype(np.float32),
+                "tokens": toks[:, :Sd], "labels": toks[:, :Sd]}
+    return {"tokens": toks, "labels": toks}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_loss_finite(arch):
+    cfg = reduced(get_config(arch))
+    bundle = get_bundle(cfg)
+    params = bundle.init(cfg, KEY, dtype=jnp.float32)
+    loss = bundle.loss(cfg, params, _batch(cfg), make_plan(cfg, None))
+    assert np.isfinite(float(loss))
+    # random-init loss should be near ln(vocab_padded)
+    assert abs(float(loss) - np.log(cfg.vocab_padded)) < 1.5
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "mamba2-2.7b",
+                                  "llama4-scout-17b-a16e", "zamba2-2.7b",
+                                  "seamless-m4t-large-v2"])
+def test_one_train_step(arch):
+    cfg = reduced(get_config(arch))
+    opt = make_optimizer(OptimizerConfig(lr=1e-3, warmup_steps=1))
+    splan = make_plan(cfg, None)
+    step = jax.jit(make_train_step(cfg, opt, splan))
+    state = init_state(cfg, opt, KEY, dtype=jnp.float32)
+    state2, metrics = step(state, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["gnorm"]))
+    assert int(state2["step"]) == 1
+    # params actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state["params"], state2["params"])
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_shapes(arch):
+    cfg = reduced(get_config(arch))
+    bundle = get_bundle(cfg)
+    params = bundle.init(cfg, KEY, dtype=jnp.float32)
+    splan = make_plan(cfg, None)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+    logits, caches = bundle.prefill(
+        cfg, params, {k: v for k, v in batch.items() if k != "labels"},
+        splan)
+    assert logits.shape == (B, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits)).all()
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    logits2, caches2 = bundle.decode(cfg, params, caches, tok, splan)
+    assert logits2.shape == (B, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits2)).all()
+    assert int(caches2["index"]) == int(caches["index"]) + 1
+
+
+def test_input_specs_cover_all_cells():
+    """Every (arch × shape) cell has well-defined input specs."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            specs = input_specs(cfg, shape)
+            leaves = jax.tree_util.tree_leaves(specs)
+            assert leaves, (arch, shape.name)
+            for leaf in leaves:
+                assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_param_counts_match_published_scale():
+    """Sanity: full-config param counts land in the advertised ballpark."""
+    expect = {
+        "yi-34b": (30e9, 40e9),
+        "olmo-1b": (0.9e9, 1.6e9),
+        "qwen2-7b": (6e9, 9e9),
+        "minitron-4b": (3.5e9, 5.5e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "llama4-scout-17b-a16e": (80e9, 120e9),     # total (16 experts)
+        "llama4-maverick-400b-a17b": (330e9, 480e9),
+        "zamba2-2.7b": (2.2e9, 3.5e9),
+        "chameleon-34b": (30e9, 40e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}-{hi/1e9}]"
+
+
+def test_active_params_moe():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    active = cfg.active_param_count()
+    total = cfg.param_count()
+    assert active < 0.2 * total       # top-1 of 128 experts
+    assert 12e9 < active < 30e9       # "A17B"

@@ -1,0 +1,143 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.algorithms import naive_predict, predict_raw
+from repro.core.forest import make_forest, pad_trees
+from repro.core.postprocess import postprocess
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def forests(draw):
+    T = draw(st.integers(1, 6))
+    depth = draw(st.integers(1, 5))
+    F = draw(st.integers(1, 8))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    I, L = (1 << depth) - 1, 1 << depth
+    return make_forest(
+        rng.integers(0, F, (T, I)).astype(np.int32),
+        rng.normal(size=(T, I)).astype(np.float32),
+        rng.normal(size=(T, L)).astype(np.float32),
+        default_left=rng.random((T, I)) < 0.5,
+        n_features=F), seed
+
+
+@given(forests(), st.sampled_from(["predicated", "hummingbird",
+                                   "quickscorer"]))
+@settings(**SETTINGS)
+def test_backends_equal_naive(fs, backend):
+    forest, seed = fs
+    rng = np.random.default_rng(seed + 1)
+    x = rng.normal(size=(5, forest.n_features)).astype(np.float32)
+    want = np.asarray(naive_predict(forest, jnp.asarray(x)))
+    got = np.asarray(predict_raw(forest, jnp.asarray(x), backend))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@given(forests())
+@settings(**SETTINGS)
+def test_prediction_in_leaf_range(fs):
+    """Every per-tree raw score must be one of that tree's leaf values."""
+    forest, seed = fs
+    rng = np.random.default_rng(seed + 2)
+    x = rng.normal(size=(4, forest.n_features)).astype(np.float32)
+    raw = np.asarray(predict_raw(forest, jnp.asarray(x), "predicated"))
+    leaves = np.asarray(forest.leaf_value)
+    for t in range(forest.num_trees):
+        for b in range(x.shape[0]):
+            assert np.any(np.isclose(raw[b, t], leaves[t])), (b, t)
+
+
+@given(forests(), st.integers(1, 7))
+@settings(**SETTINGS)
+def test_padding_never_changes_sum(fs, multiple):
+    forest, seed = fs
+    rng = np.random.default_rng(seed + 3)
+    x = rng.normal(size=(3, forest.n_features)).astype(np.float32)
+    base = np.asarray(predict_raw(forest, jnp.asarray(x),
+                                  "predicated")).sum(-1)
+    padded, _ = pad_trees(forest, multiple)
+    got = np.asarray(predict_raw(padded, jnp.asarray(x),
+                                 "predicated")).sum(-1)
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-6)
+
+
+@given(forests())
+@settings(**SETTINGS)
+def test_tree_permutation_invariance(fs):
+    """Forest prediction is a sum over trees — permutation-invariant."""
+    forest, seed = fs
+    rng = np.random.default_rng(seed + 4)
+    x = rng.normal(size=(3, forest.n_features)).astype(np.float32)
+    perm = rng.permutation(forest.num_trees)
+    shuffled = dataclasses.replace(
+        forest, **{k: v[perm] for k, v in forest.arrays().items()})
+    a = np.asarray(predict_raw(forest, jnp.asarray(x), "predicated")).sum(-1)
+    b = np.asarray(predict_raw(shuffled, jnp.asarray(x),
+                               "predicated")).sum(-1)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 200), st.floats(-5, 5),
+       st.sampled_from(["randomforest", "xgboost"]))
+@settings(**SETTINGS)
+def test_postprocess_probability_bounds(n_trees, summed, model_type):
+    p = postprocess(jnp.asarray([summed * n_trees], jnp.float32),
+                    model_type=model_type, task="classification",
+                    num_trees=n_trees)
+    val = float(p[0])
+    assert 0.0 <= val <= 1.0
+
+
+@given(st.integers(0, 2**16), st.integers(1, 4), st.integers(2, 48))
+@settings(**SETTINGS)
+def test_chunked_attention_matches_dense(seed, b, s):
+    """The flash-style blockwise attention == plain softmax attention."""
+    from repro.models.layers import _chunked_sdpa, _sdpa, AttnSpec
+    rng = np.random.default_rng(seed)
+    H = KV = 2
+    dh = 4
+    q = jnp.asarray(rng.normal(size=(b, s, H, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, KV, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, KV, dh)).astype(np.float32))
+    pos = jnp.arange(s)
+    mask = pos[:, None] >= pos[None, :]
+    want = _sdpa(q, k, v, mask, kv_groups=1)
+    got = _chunked_sdpa(q, k, v, kv_groups=1, q_positions=pos,
+                        kv_positions=pos,
+                        spec=AttnSpec(causal=True), chunk=7)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+@given(st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunked_matches_recurrence(seed):
+    """SSD chunked scan == the literal per-token recurrence."""
+    from repro.configs import get_config, reduced
+    from repro.models.ssd import init_ssd, ssd_forward, ssd_decode, \
+        init_ssd_cache
+    cfg = reduced(get_config("mamba2-2.7b"))
+    key = jax.random.PRNGKey(seed)
+    p = init_ssd(cfg, key, jnp.float32)
+    rng = np.random.default_rng(seed)
+    B, S = 1, 24
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)).astype(np.float32)
+                    * 0.3)
+    full = ssd_forward(cfg, p, x, chunk=8)
+    cache = init_ssd_cache(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        y, cache = ssd_decode(cfg, p, x[:, t:t + 1], cache)
+        outs.append(y)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               rtol=2e-3, atol=2e-4)

@@ -1,0 +1,141 @@
+"""Sharding policy unit tests (no multi-device execution needed — specs
+are pure data; the dry-run exercises the real 512-device lowering)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist.sharding import make_plan, param_specs, cache_specs
+
+pytestmark = pytest.mark.filterwarnings("ignore:.*axis_types.*")
+
+
+class FakeMesh:
+    """Stand-in with .shape/.axis_names (spec rules only consume these)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def test_attn_mode_selection():
+    expect_tp = {"olmo-1b", "seamless-m4t-large-v2", "zamba2-2.7b"}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        plan = make_plan(cfg, MESH)  # type: ignore[arg-type]
+        want = "tp" if arch in expect_tp else "cp"
+        if cfg.num_heads == 0:       # mamba2: attention-free, mode unused
+            continue
+        assert plan.attn_mode == want, arch
+
+
+def test_plan_single_device_is_empty_specs():
+    plan = make_plan(get_config("olmo-1b"), None)
+    assert plan.hidden == P() and plan.mesh is None
+
+
+def test_param_specs_rules():
+    params = {
+        "embed": jnp.zeros((50304, 2048)),
+        "blocks": {"p0": {"attn": {"wq": jnp.zeros((16, 2048, 2048)),
+                                   "bq": jnp.zeros((16, 2048))},
+                          "moe": {"wi": jnp.zeros((16, 32, 2048, 4096)),
+                                  "router": jnp.zeros((2048, 32))}}},
+        "final_norm": {"scale": jnp.zeros((2048,))},
+    }
+    specs = param_specs(params, MESH)  # type: ignore[arg-type]
+    # stacked dim 0 never sharded
+    wq = specs["blocks"]["p0"]["attn"]["wq"]
+    assert wq[0] is None and set(wq) >= {"model", "data", None}
+    # MoE expert dim pinned to model
+    wi = specs["blocks"]["p0"]["moe"]["wi"]
+    assert wi[1] == "model"
+    # embed: d_model on model, vocab on data
+    assert specs["embed"] == P("data", "model")
+    # small leaves replicated
+    assert specs["final_norm"]["scale"] == P()
+    assert specs["blocks"]["p0"]["moe"]["router"] == P(None, "model") or \
+        specs["blocks"]["p0"]["moe"]["router"] == P()
+
+
+def test_param_specs_divisibility():
+    """Every sharded dim must divide the axis size (the dry-run's
+    lowering would reject uneven shards for these rules)."""
+    from repro.models import get_bundle
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        bundle = get_bundle(cfg)
+        sds = jax.eval_shape(
+            lambda k: bundle.init(cfg, k, dtype=jnp.bfloat16),
+            jax.random.PRNGKey(0))
+        specs = param_specs(sds, MESH)  # type: ignore[arg-type]
+
+        def check(path, leaf, spec):
+            for dim, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                size = {"data": 16, "model": 16}[ax]
+                assert leaf.shape[dim] % size == 0, (arch, path, leaf.shape)
+        jax.tree_util.tree_map_with_path(
+            lambda p, l, s: check(p, l, s), sds, specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def test_cache_specs_shapes():
+    cfg = get_config("zamba2-2.7b")
+    from repro.models.lm import init_caches
+    caches = jax.eval_shape(lambda: init_caches(cfg, 128, 1024))
+    plan = make_plan(cfg, MESH, decode_batch=128)  # type: ignore[arg-type]
+    specs = cache_specs(caches, plan)
+
+    def check(path, leaf, spec):
+        name = str(getattr(path[-1], "key", ""))
+        if hasattr(leaf, "ndim") and leaf.ndim:
+            assert len(spec) <= leaf.ndim, (name, leaf.shape, spec)
+    jax.tree_util.tree_map_with_path(
+        check, caches, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def test_decode_small_batch_plan():
+    cfg = get_config("llama4-scout-17b-a16e")
+    plan = make_plan(cfg, MESH, decode_batch=1)  # type: ignore[arg-type]
+    # cache S axis sharded over everything, batch replicated
+    assert plan.decode_cache[0] is None
+    assert plan.decode_cache[1] == ("data", "model")
+    assert plan.ssm_state[0] is None
+
+
+def test_roofline_collective_parser():
+    from repro.launch.roofline import parse_collectives
+    hlo = """
+  %ag = f32[512,1024]{0,1} all-gather(%x), channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %ar = bf16[256]{0} all-reduce(%y), replica_groups=[4,64]<=[256], to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = u32[8,2]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+"""
+    stats = parse_collectives(hlo)
+    assert stats.counts == {"all-gather": 1, "all-reduce": 1,
+                            "reduce-scatter": 1, "collective-permute": 1}
+    ag = 512 * 1024 * 4
+    assert stats.bytes_by_kind["all-gather"] == ag // 4
+    assert stats.bytes_by_kind["all-reduce"] == 256 * 2
+    assert stats.bytes_by_kind["reduce-scatter"] == 64 * 4 * 4
+    assert stats.bytes_by_kind["collective-permute"] == 8 * 2 * 4
+    assert stats.total_wire_bytes > 0
+
+
+def test_roofline_terms_dominance():
+    from repro.launch.roofline import roofline_terms
+    t = roofline_terms(flops_per_chip=197e12, bytes_per_chip=1.0,
+                       coll_bytes_per_chip=1.0)
+    assert t["dominant"] == "compute_s"
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    t2 = roofline_terms(flops_per_chip=1.0, bytes_per_chip=819e9 * 2,
+                        coll_bytes_per_chip=1.0)
+    assert t2["dominant"] == "memory_s"
