@@ -6,11 +6,21 @@ tensorized (HummingBird) form pays for its dense path tensors.
 Also benchmarks the Pallas kernels in interpret mode — NOT a wall-clock
 claim (interpret mode is a Python emulator; the compiled-TPU story lives
 in §Roofline) but a per-call overhead record, so the kernel path is
-exercised by the same harness."""
+exercised by the same harness.
+
+FUSED section (``run_fused`` / BENCH_fused.json): jitted fused
+(in-kernel SUM aggregation, no [B, T] round-trip) vs jitted unfused
+(predict + aggregate_raw) for every Pallas backend on the 500/1600-tree
+grid.  Off-TPU both run through the compiled interpreter path, so the
+comparison isolates exactly the materialization the fusion removes; the
+JSON is the perf trajectory record for this optimization from this PR
+onward."""
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -19,8 +29,12 @@ import numpy as np
 
 from benchmarks import common as C
 from repro.core.algorithms import ALGORITHMS, predict_raw
+from repro.core.postprocess import aggregate_raw
 
 ALGOS = ("naive", "predicated", "compiled", "hummingbird", "quickscorer")
+FUSED_TREE_GRID = (500, 1600)
+BENCH_FUSED_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_fused.json")
 
 
 def _time(fn, *args, warmup=1, iters=3):
@@ -64,15 +78,85 @@ def run(dataset="higgs", trees=(10, 500, 1600), batch=2048,
     return rows
 
 
+def run_fused(dataset="higgs", trees=FUSED_TREE_GRID, batch=512, iters=3):
+    """Fused vs unfused Pallas backends, jitted end to end.
+
+    Returns (rows, records): rows in the common CSV schema, records as the
+    BENCH_fused.json trajectory entries {trees, algorithm, unfused_s,
+    fused_s, speedup, batch, backend}.
+    """
+    from repro.kernels.ops import FUSED_KERNEL_ALGORITHMS, KERNEL_ALGORITHMS
+
+    x, _ = C.bench_data(dataset, scale=1.0)
+    x = jnp.asarray(x[:batch])
+    backend = jax.default_backend()
+    rows, records = [], []
+    for T in trees:
+        forest = C.get_forest(dataset, "xgboost", T)
+        for name, kfn in KERNEL_ALGORITHMS.items():
+            fname = name + "_fused"
+            ffn = FUSED_KERNEL_ALGORITHMS[fname]
+            unfused = jax.jit(lambda xx, f=kfn: aggregate_raw(f(forest, xx)))
+            fused = jax.jit(lambda xx, f=ffn: f(forest, xx))
+
+            def best(fn):
+                jax.block_until_ready(fn(x))        # compile + warm
+                times = []
+                for _ in range(iters):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(x))
+                    times.append(time.perf_counter() - t0)
+                return min(times)
+
+            t_un, t_fu = best(unfused), best(fused)
+            for plat, dt, fn in ((f"pallas-{name}+agg", t_un, unfused),
+                                 (f"pallas-{fname}", t_fu, fused)):
+                rows.append(dict(dataset=dataset, model="xgboost", trees=T,
+                                 platform=plat, load_s=0.0,
+                                 infer_s=round(dt, 5), write_s=0.0,
+                                 total_s=round(dt, 5),
+                                 checksum=float(jnp.sum(fn(x)))))
+            records.append(dict(trees=T, algorithm=name, batch=batch,
+                                backend=backend,
+                                unfused_s=round(t_un, 5),
+                                fused_s=round(t_fu, 5),
+                                speedup=round(t_un / max(t_fu, 1e-9), 3)))
+    return rows, records
+
+
+def write_fused_json(records, path=BENCH_FUSED_JSON):
+    payload = {"bench": "fused_vs_unfused", "created_at": time.time(),
+               "records": records}
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    return path
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--trees", default="10,500,1600")
     ap.add_argument("--batch", type=int, default=2048)
     ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced batch/iters; the fused section keeps the "
+                         "500/1600 grid (its claim lives there)")
+    ap.add_argument("--no-fused", action="store_true")
+    ap.add_argument("--fused-out", default=BENCH_FUSED_JSON)
     args = ap.parse_args()
     trees = tuple(int(t) for t in args.trees.split(","))
-    C.print_rows(run(trees=trees, batch=args.batch,
-                     include_pallas=args.pallas))
+    if args.fast:
+        trees = tuple(t for t in trees if t <= 100) or (10, 100)
+    C.print_rows(run(trees=trees, batch=min(args.batch, 512) if args.fast
+                     else args.batch, include_pallas=args.pallas))
+    if not args.no_fused:
+        rows, records = run_fused(
+            batch=256 if args.fast else 512,
+            iters=3 if args.fast else 5)
+        C.print_rows(rows)
+        path = write_fused_json(records, args.fused_out)
+        ok = all(r["speedup"] > 1.0 for r in records)
+        print(f"# fused trajectory -> {path}  "
+              f"(all fused faster: {ok})")
 
 
 if __name__ == "__main__":

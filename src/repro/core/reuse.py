@@ -25,7 +25,17 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
-__all__ = ["MaterializedModel", "ModelReuseCache", "fingerprint_forest"]
+__all__ = ["MaterializedModel", "ModelReuseCache", "fingerprint_forest",
+           "mesh_signature", "GLOBAL_CACHE", "GLOBAL_PLAN_CACHE"]
+
+
+def mesh_signature(mesh) -> tuple | int:
+    """Content-based mesh identity for cache keys (id() can be reused
+    after GC — the global caches outlive engines and their meshes)."""
+    if mesh is None:
+        return 0
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(d.id for d in mesh.devices.flat))
 
 
 def fingerprint_forest(forest) -> str:
@@ -59,10 +69,17 @@ class _Stats:
 
 
 class ModelReuseCache:
-    """Keyed materialization cache (paper's netsDB-OPT mechanism)."""
+    """Keyed materialization cache (paper's netsDB-OPT mechanism).
+
+    Generic over the entry type: anything with a mutable ``build_time_s``
+    attribute can be cached (``MaterializedModel`` for the partition stage,
+    ``db.query.CompiledQueryPlan`` for jitted end-to-end stage functions —
+    the paper's model-reuse optimization lifted to plan reuse).  Eviction is
+    LRU: a hit refreshes the key's recency.
+    """
 
     def __init__(self, max_entries: int = 32):
-        self._entries: dict[tuple, MaterializedModel] = {}
+        self._entries: dict[tuple, Any] = {}
         self._order: list[tuple] = []
         self._max = max_entries
         self.stats = _Stats()
@@ -70,20 +87,22 @@ class ModelReuseCache:
     # -- key --------------------------------------------------------------
     @staticmethod
     def make_key(model_id: str, mesh, plan_signature: str) -> tuple:
-        mesh_id = (tuple(mesh.axis_names), tuple(mesh.devices.shape),
-                   tuple(d.id for d in mesh.devices.flat))
-        return (model_id, mesh_id, plan_signature)
+        return (model_id, mesh_signature(mesh), plan_signature)
 
     # -- api ----------------------------------------------------------------
     def get_or_build(
         self,
         key: tuple,
-        build: Callable[[], MaterializedModel],
-    ) -> MaterializedModel:
+        build: Callable[[], Any],
+    ) -> Any:
         entry = self._entries.get(key)
         if entry is not None:
             self.stats.hits += 1
             self.stats.saved_time_s += entry.build_time_s
+            # LRU refresh: without this the cache degrades to FIFO and can
+            # evict the hottest model while cold ones survive
+            self._order.remove(key)
+            self._order.append(key)
             return entry
         self.stats.misses += 1
         t0 = time.perf_counter()
@@ -114,5 +133,10 @@ class ModelReuseCache:
         return len(self._entries)
 
 
-# process-global default cache (one per pod; pods share nothing — DESIGN §8)
+# process-global default caches (one per pod; pods share nothing — DESIGN §8)
 GLOBAL_CACHE = ModelReuseCache()
+# compiled query plans are host objects holding jitted callables, but they
+# pin device memory too: rel-plan entries hold their MaterializedModel and
+# udf-plan entries their own padded forest copy — so the plan cache gets
+# the same slot budget as the model cache, not more
+GLOBAL_PLAN_CACHE = ModelReuseCache(max_entries=32)

@@ -24,7 +24,13 @@ from typing import Any, Callable, Sequence
 
 import jax
 
-__all__ = ["Operator", "Stage", "StageReport", "run_stages"]
+__all__ = ["Operator", "Stage", "StageReport", "run_stages", "TRACE_STATS"]
+
+# Tracing telemetry: a stage's fused body runs as Python only while jax.jit
+# TRACES it (cache hits go straight to the compiled executable), so this
+# counter counts (re)traces — the compiled-plan cache's "no re-tracing"
+# guarantee is asserted against it.
+TRACE_STATS = {"traces": 0}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +71,7 @@ class Stage:
 
     def __post_init__(self):
         def fused(state):
+            TRACE_STATS["traces"] += 1
             for op in self.operators:
                 state = op.fn(state)
             return state

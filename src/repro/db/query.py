@@ -15,6 +15,19 @@ Three plans over the same logical query  SCAN -> PREDICT -> AGGREGATE -> WRITE
              ModelReuseCache and reused across queries on the same model,
              collapsing steady-state execution to the three data stages.
 
+Fused backends (``*_pallas_fused``) run phase-2 aggregation INSIDE the
+kernel: both plans then consume [B] (or [n_parts, B]) partial sums and the
+[B, T] per-tree score matrix never exists in the query path — the
+materialization the paper charges stage boundaries with, eliminated at the
+kernel level.
+
+Compiled-plan cache: ``ModelReuseCache`` generalized from the partition
+stage's OUTPUT to the whole plan's EXECUTABLE.  The jitted stage list —
+keyed on (model fingerprint, algorithm, plan, batch signature, mesh) — is
+built once; steady-state queries skip partitioning AND tracing/compilation
+(the first-query vs steady-state distinction of Sec. 3.3, lifted one level).
+``rel`` deliberately stays uncached: it is the paper's no-reuse baseline.
+
 Each stage is timed and its materialized bytes recorded, reproducing the
 paper's latency breakdowns.  On a mesh the plans run under ``shard_map`` so
 data/model parallelism is explicit; without a mesh a single-device path keeps
@@ -25,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import weakref
 from functools import partial
 from typing import Any
 
@@ -35,12 +49,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import algorithms as algs
 from repro.core import postprocess as post
-from repro.core.forest import Forest, hb_path_matrix, pad_trees, qs_bitvectors
-from repro.core.reuse import GLOBAL_CACHE, MaterializedModel, ModelReuseCache, fingerprint_forest
+from repro.core.forest import (Forest, hb_path_matrix, pad_trees,
+                               qs_bitvectors, tree_slice)
+from repro.core.reuse import (GLOBAL_CACHE, GLOBAL_PLAN_CACHE,
+                              MaterializedModel, ModelReuseCache,
+                              fingerprint_forest, mesh_signature)
 from repro.db.operators import Operator, StageReport, run_stages, split_into_stages
 from repro.db.store import TensorBlockStore
 
-__all__ = ["QueryResult", "ForestQueryEngine"]
+__all__ = ["QueryResult", "CompiledQueryPlan", "ForestQueryEngine"]
 
 
 @dataclasses.dataclass
@@ -55,7 +72,8 @@ class QueryResult:
     aggregate_s: float
     write_s: float
     total_s: float
-    reuse_hit: bool = False
+    reuse_hit: bool = False           # model-cache OR plan-cache hit
+    plan_reuse_hit: bool = False      # compiled-plan cache hit specifically
 
     def breakdown(self) -> dict[str, float]:
         return {
@@ -65,6 +83,24 @@ class QueryResult:
             "write": self.write_s,
             "total": self.total_s,
         }
+
+
+@dataclasses.dataclass
+class CompiledQueryPlan:
+    """A materialized plan executable: the jitted stage list + its model.
+
+    The stages close over the padded/partitioned device-resident forest, so
+    a cache hit reuses BOTH the partition-stage output (model reuse) and
+    every stage's jit cache (no re-tracing, no re-compilation for already
+    seen batch shapes).
+    """
+
+    stages: list                      # list[operators.Stage]
+    num_stages: int                   # reported count (incl. partition stage)
+    mat: Any = None                   # rel plans: pins the MaterializedModel
+    #                                   whose id() keys this entry, so the id
+    #                                   cannot be reused while the entry lives
+    build_time_s: float = 0.0         # set by ModelReuseCache.get_or_build
 
 
 def _predict_fn(algorithm: str):
@@ -77,14 +113,48 @@ def _predict_fn(algorithm: str):
     raise ValueError(f"unknown algorithm {algorithm!r}")
 
 
+def _predict_sum_fn(algorithm: str):
+    """(forest, x) -> [B] summed raw margins; returns (fn, is_fused).
+
+    Fused Pallas backends aggregate in-kernel; everything else composes
+    ``aggregate_raw`` over the raw [B, T] backend (the unfused reference
+    data path).
+    """
+    from repro.kernels.ops import FUSED_KERNEL_ALGORITHMS
+    if algorithm in FUSED_KERNEL_ALGORITHMS:
+        return FUSED_KERNEL_ALGORITHMS[algorithm], True
+    predict = _predict_fn(algorithm)
+    return (lambda forest, x: post.aggregate_raw(predict(forest, x))), False
+
+
 class ForestQueryEngine:
     """Executes forest-inference queries against a TensorBlockStore."""
 
     def __init__(self, store: TensorBlockStore, mesh: Mesh | None = None,
-                 reuse_cache: ModelReuseCache | None = None):
+                 reuse_cache: ModelReuseCache | None = None,
+                 plan_cache: ModelReuseCache | None = None):
         self.store = store
         self.mesh = mesh if mesh is not None else store.mesh
         self.cache = reuse_cache if reuse_cache is not None else GLOBAL_CACHE
+        self.plan_cache = (plan_cache if plan_cache is not None
+                           else GLOBAL_PLAN_CACHE)
+        # id -> content fingerprint, invalidated when the Forest is GC'd
+        self._fingerprints: dict[int, str] = {}
+
+    # ------------------------------------------------------------------
+    # cache-key components
+    # ------------------------------------------------------------------
+    # model identity: content hash, computed once per live Forest object
+    def _model_key(self, forest: Forest, model_id: str | None) -> str:
+        if model_id is not None:
+            return model_id
+        k = id(forest)
+        fp = self._fingerprints.get(k)
+        if fp is None:
+            fp = fingerprint_forest(forest)
+            self._fingerprints[k] = fp
+            weakref.finalize(forest, self._fingerprints.pop, k, None)
+        return fp
 
     # ------------------------------------------------------------------
     # model partition stage (the reusable one)
@@ -116,15 +186,14 @@ class ForestQueryEngine:
     # plan bodies
     # ------------------------------------------------------------------
     def _udf_ops(self, forest: Forest, algorithm: str, true_T: int):
-        predict = _predict_fn(algorithm)
+        predict_sum, _ = _predict_sum_fn(algorithm)
         meta = dict(model_type=forest.model_type, task=forest.task,
                     num_trees=true_T, base_score=forest.base_score)
 
         def udf(state):
             x = state["x"]
-            raw = predict(forest, x)
             state = dict(state)
-            state["pred"] = post.postprocess(post.aggregate_raw(raw), **meta)
+            state["pred"] = post.postprocess(predict_sum(forest, x), **meta)
             return state
 
         return [
@@ -134,7 +203,7 @@ class ForestQueryEngine:
         ]
 
     def _rel_ops(self, mat: MaterializedModel, algorithm: str):
-        predict = _predict_fn(algorithm)
+        predict_sum, fused = _predict_sum_fn(algorithm)
         forest = mat.forest
         meta = dict(model_type=forest.model_type, task=forest.task,
                     num_trees=mat.true_num_trees, base_score=forest.base_score)
@@ -149,18 +218,24 @@ class ForestQueryEngine:
             Model parallelism: partial[p, b] = sum of tree scores of
             partition p on sample b.  On a mesh this runs under shard_map
             with the tree axis sharded; locally it is a reshaped vmap —
-            identical math, same [n_parts, B] partials."""
+            identical math, same [n_parts, B] partials.  Fused backends
+            aggregate in-kernel per partition, so the per-partition call
+            already yields [B] and the unrolled partition loop replaces
+            the vmap (pallas grids don't batch)."""
             x = state["x"]
-
-            def one_part(tree_part: Forest):
-                return post.aggregate_raw(predict(tree_part, x))  # [B]
-
             T = forest.num_trees
             per = T // n_parts
-            parts = jax.tree_util.tree_map(
-                lambda a: a.reshape((n_parts, per) + a.shape[1:]),
-                forest)
-            partial_scores = jax.vmap(one_part)(parts)            # [P, B]
+
+            if fused:
+                partial_scores = jnp.stack(
+                    [predict_sum(tree_slice(forest, p * per, per), x)
+                     for p in range(n_parts)])                # [P, B]
+            else:
+                parts = jax.tree_util.tree_map(
+                    lambda a: a.reshape((n_parts, per) + a.shape[1:]),
+                    forest)
+                partial_scores = jax.vmap(
+                    lambda tree_part: predict_sum(tree_part, x))(parts)
             state = dict(state)
             state["partials"] = partial_scores
             return state
@@ -203,27 +278,46 @@ class ForestQueryEngine:
             raise ValueError(f"unknown plan {plan!r}")
         ds = self.store.get(dataset)
         t_query0 = time.perf_counter()
+        batch_pages = batch_pages or ds.num_pages
+
+        # the batch signature pins every block shape the stage jits will
+        # see, so a plan-cache hit implies zero re-tracing
+        mesh_id = mesh_signature(self.mesh)
+        batch_sig = (ds.data.shape[1], ds.num_pages, ds.page_rows,
+                     batch_pages)
 
         partition_s = 0.0
-        reuse_hit = False
+        model_hit = False
+        plan_hit = False
+        prefix_reports: list[StageReport] = []
+
         if plan == "udf":
-            fp, true_T = pad_trees(forest, 1)
-            ops = self._udf_ops(fp, algorithm, true_T)
-            prefix_reports: list[StageReport] = []
+            mid = self._model_key(forest, model_id)
+            pkey = ("udf-plan", mid, algorithm, batch_sig, mesh_id)
+
+            def build_udf() -> CompiledQueryPlan:
+                fp, true_T = pad_trees(forest, 1)
+                stages = split_into_stages(
+                    self._udf_ops(fp, algorithm, true_T))
+                return CompiledQueryPlan(stages=stages,
+                                         num_stages=len(stages))
+
+            before = self.plan_cache.stats.hits
+            qplan = self.plan_cache.get_or_build(pkey, build_udf)
+            plan_hit = self.plan_cache.stats.hits > before
         else:
             n_parts = (self.mesh.shape["model"]
                        if self.mesh is not None and
                        "model" in self.mesh.axis_names else 4)
             t0 = time.perf_counter()
             if plan == "rel+reuse":
-                mid = model_id or fingerprint_forest(forest)
-                key = (mid, algorithm, n_parts,
-                       id(self.mesh) if self.mesh is not None else 0)
+                mid = self._model_key(forest, model_id)
+                mkey = (mid, algorithm, n_parts, mesh_id)
                 before_hits = self.cache.stats.hits
                 mat = self.cache.get_or_build(
-                    key, lambda: self._partition_model(forest, algorithm,
-                                                       n_parts))
-                reuse_hit = self.cache.stats.hits > before_hits
+                    mkey, lambda: self._partition_model(forest, algorithm,
+                                                        n_parts))
+                model_hit = self.cache.stats.hits > before_hits
             else:
                 mat = self._partition_model(forest, algorithm, n_parts)
             partition_s = time.perf_counter() - t0
@@ -235,12 +329,37 @@ class ForestQueryEngine:
                     a.size * a.dtype.itemsize
                     for a in mat.forest.arrays().values()),
             )]
-            ops = self._rel_ops(mat, algorithm)
 
-        stages = split_into_stages(ops)
+            if plan == "rel+reuse":
+                # id(mat) ties the plan entry to THIS materialization: if
+                # the model cache evicted and rebuilt the model, the new
+                # mat has a new id and the stale plan misses instead of
+                # serving stages over the old arrays.  The entry stores
+                # mat itself (CompiledQueryPlan.mat) so the keyed id stays
+                # pinned for the entry's lifetime — the stage closures
+                # alone only capture mat.forest, which would let the
+                # wrapper be freed and its id reused
+                pkey = ("rel-plan", mid, algorithm, n_parts, batch_sig,
+                        mesh_id, id(mat))
+
+                def build_rel() -> CompiledQueryPlan:
+                    stages = split_into_stages(self._rel_ops(mat, algorithm))
+                    return CompiledQueryPlan(stages=stages,
+                                             num_stages=len(stages) + 1,
+                                             mat=mat)
+
+                before = self.plan_cache.stats.hits
+                qplan = self.plan_cache.get_or_build(pkey, build_rel)
+                plan_hit = self.plan_cache.stats.hits > before
+            else:
+                stages = split_into_stages(self._rel_ops(mat, algorithm))
+                qplan = CompiledQueryPlan(stages=stages,
+                                          num_stages=len(stages) + 1)
+
+        reuse_hit = model_hit or plan_hit
+        stages = qplan.stages
 
         # F3 batching: iterate page batches; deterministic batch->pages map.
-        batch_pages = batch_pages or ds.num_pages
         preds = []
         reports: list[StageReport] = list(prefix_reports)
         for _, block in ds.batches(batch_pages):
@@ -271,7 +390,7 @@ class ForestQueryEngine:
             predictions=predictions,
             plan=plan,
             algorithm=algorithm,
-            num_stages=len(stages) + (1 if plan != "udf" else 0),
+            num_stages=qplan.num_stages,
             stage_reports=reports,
             partition_s=partition_s if not reuse_hit else 0.0,
             infer_s=infer_s,
@@ -279,4 +398,5 @@ class ForestQueryEngine:
             write_s=write_s,
             total_s=total_s,
             reuse_hit=reuse_hit,
+            plan_reuse_hit=plan_hit,
         )

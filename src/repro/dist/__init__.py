@@ -1,0 +1,16 @@
+"""Distribution policy: sharding plans, parameter specs, gradient compression.
+
+``repro.dist.sharding`` is the single place PartitionSpecs are decided; the
+model / trainer / serving code only places ``with_sharding_constraint``
+points and consults the plan, so distribution policy changes never touch
+layer code (DESIGN.md §5).
+"""
+
+from repro.dist.sharding import (  # noqa: F401
+    ShardingPlan,
+    batch_specs,
+    cache_specs,
+    make_plan,
+    param_specs,
+    tree_named,
+)

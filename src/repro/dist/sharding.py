@@ -1,0 +1,250 @@
+"""Sharding policy for the architecture pool (DESIGN.md §5).
+
+One ``ShardingPlan`` per (config, mesh, phase): a frozen bundle of
+PartitionSpecs that the layer code applies at its constraint points.  The
+mesh axes are ``data`` (sample/batch parallelism, optionally preceded by a
+cross-pod ``pod`` axis) and ``model`` (tensor/context parallelism).
+
+Attention distribution picks between two modes:
+
+  tp   head tensor-parallelism — q/k/v head axes sharded over ``model``.
+       Only legal when BOTH num_heads and num_kv_heads divide the model
+       axis (olmo 16/16, seamless 16/16, zamba2 32/32 on a 16-way axis).
+  cp   context parallelism — the SEQUENCE axis is sharded over ``model``;
+       K/V are replicated per layer (the per-layer all-gather).  Works for
+       every head count (yi 56H/8KV, qwen2 28H/4KV, llama4 40H/8KV, ...).
+
+Decode gets its own specs because the batch is often smaller than the mesh:
+a [1, ...] decode stream replicates the batch axis and instead shards the
+cache SEQUENCE axis over *all* axes (flash-decoding: the softmax over the
+sharded axis lowers to partial reduce + all-reduce — the (m, l, o) merge).
+
+Parameter specs are rule-based over the param pytree (``param_specs``):
+  * leading stack dims of scan-over-blocks pytrees are never sharded;
+  * MoE expert tensors pin the expert dim to ``model`` (expert parallelism);
+  * large matrices shard their last dim over ``model`` and the dim before
+    it over ``data`` (megatron TP x FSDP), but only when the dim divides
+    the axis size — the dry-run's lowering rejects uneven shards;
+  * small leaves (biases, norm scales, routers) are replicated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingPlan",
+    "make_plan",
+    "param_specs",
+    "batch_specs",
+    "cache_specs",
+    "tree_named",
+]
+
+# leaves below this many elements are replicated (biases, norms, routers);
+# sharding them saves nothing and costs a collective per use
+_MIN_SHARD_SIZE = 1 << 18
+
+# top-level pytree keys whose leaves carry a leading scan-over-blocks stack
+# dim (lax.scan iterates it) — that dim is never sharded
+_STACKED_COLLECTIONS = ("blocks", "lora", "enc_blocks", "dec_blocks")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Frozen sharding policy for one (config, mesh, phase)."""
+
+    mesh: Any                        # Mesh | None (None = single device)
+    attn_mode: str                   # "tp" | "cp"
+    data_axes: tuple[str, ...]       # ("data",) or ("pod", "data")
+    model_axis: str | None           # "model" when the mesh has one
+    # --- activation specs ------------------------------------------------
+    hidden: P                        # train/prefill hidden   [B, S, D]
+    decode_hidden: P                 # decode hidden          [B, 1, D]
+    qkv: P                           # projected queries      [B, S, H, dh]
+    kv_ctx: P                        # full-context K/V       [B, Sk, KV, dh]
+    decode_cache: P                  # decode-time K/V cache  [B, Sc, KV, dh]
+    ssm_state: P                     # SSD recurrent state    [B, H, P, N]
+
+
+def _data_entry(data_axes: tuple[str, ...]):
+    if not data_axes:
+        return None
+    return data_axes[0] if len(data_axes) == 1 else data_axes
+
+
+def make_plan(cfg, mesh, decode_batch: int | None = None) -> ShardingPlan:
+    """Build the plan for ``cfg`` on ``mesh``.
+
+    ``decode_batch``: global decode batch, used to decide whether the batch
+    axis is worth sharding (a [1, ...] stream replicates the batch and
+    shards the cache sequence axis over everything instead).  ``mesh`` may
+    be any object with ``.shape``/``.axis_names`` (specs are pure data).
+    """
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        empty = P()
+        return ShardingPlan(
+            mesh=None, attn_mode="cp", data_axes=(), model_axis=None,
+            hidden=empty, decode_hidden=empty, qkv=empty, kv_ctx=empty,
+            decode_cache=empty, ssm_state=empty)
+
+    axis_names = tuple(mesh.axis_names)
+    model = "model" if "model" in axis_names else None
+    n_model = int(mesh.shape["model"]) if model else 1
+    data_axes = tuple(a for a in axis_names if a != "model")
+    da = _data_entry(data_axes)
+    import numpy as np
+    n_data = int(np.prod([mesh.shape[a] for a in data_axes] or [1]))
+
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    tp_ok = (model is not None and H > 0
+             and H % n_model == 0 and KV % n_model == 0)
+    attn_mode = "tp" if tp_ok else "cp"
+
+    if attn_mode == "tp":
+        hidden = P(da, None, model)
+        qkv = P(da, None, model, None)
+        kv_ctx = P(da, None, model, None)
+    else:
+        hidden = P(da, model, None)
+        qkv = P(da, model, None, None)
+        kv_ctx = P(da, None, None, None)      # replicated K/V: the CP gather
+
+    # decode: batch sharding only pays when the batch covers the data axes
+    small_batch = decode_batch is not None and decode_batch < n_data
+    if small_batch:
+        every = data_axes + ((model,) if model else ())
+        decode_hidden = P(None, None, None)
+        decode_cache = P(None, every if len(every) > 1 else every[0],
+                         None, None)
+    else:
+        decode_hidden = P(da, None, None)
+        if attn_mode == "tp":
+            decode_cache = P(da, None, model, None)
+        else:
+            decode_cache = P(da, model, None, None)
+
+    # SSD state [B, H, P, N]: shard heads over model when they divide
+    try:
+        ssm_heads = int(cfg.ssm_heads)
+    except Exception:
+        ssm_heads = 0
+    h_entry = model if (model and ssm_heads and ssm_heads % n_model == 0) \
+        else None
+    ssm_state = P(None if small_batch else da, h_entry, None, None)
+
+    return ShardingPlan(
+        mesh=mesh, attn_mode=attn_mode, data_axes=data_axes,
+        model_axis=model, hidden=hidden, decode_hidden=decode_hidden,
+        qkv=qkv, kv_ctx=kv_ctx, decode_cache=decode_cache,
+        ssm_state=ssm_state)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (rule-based over the pytree)
+# ---------------------------------------------------------------------------
+
+
+def _path_keys(path) -> list[str]:
+    keys = []
+    for p in path:
+        k = getattr(p, "key", None)
+        if k is None:
+            k = getattr(p, "idx", None)
+        keys.append(str(k))
+    return keys
+
+
+def param_specs(tree, mesh):
+    """PartitionSpec tree for a param (or optimizer-state) pytree."""
+    axis_names = tuple(getattr(mesh, "axis_names", ()))
+    n_model = int(mesh.shape["model"]) if "model" in axis_names else 0
+    n_data = int(mesh.shape["data"]) if "data" in axis_names else 0
+
+    def one(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        ndim = len(shape)
+        size = 1
+        for s in shape:
+            size *= s
+        if ndim <= 1 or size < _MIN_SHARD_SIZE:
+            return P()
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        first = 1 if (keys and keys[0] in _STACKED_COLLECTIONS) else 0
+        spec: list = [None] * ndim
+
+        # MoE expert tensors: pin the expert dim to 'model' (EP), give the
+        # d_model dim to 'data'
+        if (ndim - first >= 3 and len(keys) >= 2 and keys[-2] == "moe"
+                and name in ("wi", "wg", "wo")):
+            e_dim = ndim - 3
+            if n_model and shape[e_dim] % n_model == 0 and e_dim >= first:
+                spec[e_dim] = "model"
+            if n_data and shape[e_dim + 1] % n_data == 0:
+                spec[e_dim + 1] = "data"
+            return P(*spec)
+
+        if n_model and shape[-1] % n_model == 0 and ndim - 1 >= first:
+            spec[-1] = "model"
+        if (ndim >= 2 and n_data and shape[-2] % n_data == 0
+                and ndim - 2 >= first):
+            spec[-2] = "data"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(
+        one, tree,
+        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "dtype"))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(plan: ShardingPlan) -> dict[str, P]:
+    """Input-batch PartitionSpecs (tokens/labels [B, S], frames [B, S, D])."""
+    if plan.mesh is None:
+        return {"tokens": P(), "labels": P(), "frames": P()}
+    da = _data_entry(plan.data_axes)
+    return {"tokens": P(da, None), "labels": P(da, None),
+            "frames": P(da, None, None)}
+
+
+def cache_specs(caches, plan: ShardingPlan):
+    """PartitionSpec tree for a decode-cache pytree.
+
+    Handles stacked [nB, B, ...] and unstacked [B, ...] layouts by matching
+    the spec to the TRAILING dims; leading stack dims stay unsharded.
+    """
+    def one(path, leaf):
+        ndim = int(getattr(leaf, "ndim", 0) or len(getattr(leaf, "shape", ())))
+        name = _path_keys(path)[-1] if path else ""
+        if name == "index" or ndim < 2 or plan.mesh is None:
+            return P()
+        if name in ("k", "v") and ndim >= 4:
+            return P(*((None,) * (ndim - 4) + tuple(plan.decode_cache)))
+        if name == "state" and ndim >= 4:
+            return P(*((None,) * (ndim - 4) + tuple(plan.ssm_state)))
+        if name == "conv" and ndim >= 3:
+            return P(*((None,) * (ndim - 3)
+                       + (plan.decode_hidden[0], None, None)))
+        if name == "memory" and ndim >= 3:
+            return P(*((None,) * (ndim - 3)
+                       + (plan.decode_hidden[0], None, None)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        one, caches,
+        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "dtype"))
+
+
+def tree_named(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree (jit in/out_shardings)."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

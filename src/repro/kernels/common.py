@@ -70,18 +70,41 @@ def onehot_select(values, idx):
 
 
 def block_heuristics(B, T, I, L, F, *, vmem_budget_bytes=12 * 1024 * 1024,
-                     itemsize=4):
+                     itemsize=4, used_features=None, max_block_t=8):
     """Pick (BB, BT) so the kernel working set fits the VMEM budget.
 
-    Working set (f32 words):  x BB*F + trees 3*BT*I + onehot BT*I*F
+    Working set (f32 words):  x BB*F + trees 3*BT*I + onehot BT*I*F_eff
     + s BB*BT*I + leaves BT*L + out BB*BT.   MXU alignment: BB multiple of 8
     (sublane), F/I contractions are already >=128 for depth-8 forests.
+
+    The one-hot term models the feature-selection operand of the predicate
+    GEMM.  Modeling it at the FULL feature width F starves wide-sparse
+    inputs (criteo: F = 10k): a depth-d tree tests at most I = 2^d - 1
+    distinct features, so the information content of the one-hot is
+    bounded by I regardless of F, yet the naive bt*I*F estimate explodes
+    ~40x and drives both blocks to 1.  ``F_eff = min(F, used_features or
+    I)`` caps the modeled width at the per-tree used-feature count
+    (callers may pass the true count; I is a universal upper bound).
+    NOTE this models the compiler fusing the iota-compare into operand
+    streaming; ``dense_predicates`` as written still reshapes the dense
+    [BT*I, F] one-hot, so genuinely wide F on real hardware needs the
+    feature-gather prepass tracked in ROADMAP.md before these blocks are
+    guaranteed to fit.
+
+    ``max_block_t`` is the tree-tile cap: 8 suits the unfused kernels
+    (their [BB, BT] output tile pays bandwidth per extra tree), while the
+    fused kernels pass a higher cap — their output tile is [BB, 1]
+    regardless of BT, so more trees per pass is strictly better until the
+    predicate working set hits the budget.
     """
+    f_eff = min(F, used_features if used_features is not None else I)
+    f_eff = max(f_eff, 1)
+
     def words(bb, bt):
-        return (bb * F + 3 * bt * I + bt * I * F + 2 * bb * bt * I
+        return (bb * F + 3 * bt * I + bt * I * f_eff + 2 * bb * bt * I
                 + bt * L + bb * bt)
 
-    bb, bt = min(128, B), min(8, T)
+    bb, bt = min(128, B), min(max_block_t, T)
     while words(bb, bt) * itemsize > vmem_budget_bytes and bb > 8:
         bb //= 2
     while words(bb, bt) * itemsize > vmem_budget_bytes and bt > 1:

@@ -17,6 +17,11 @@ and P live only in VMEM, per (sample-tile x tree-tile):
 
 HBM traffic per tile drops from (read S + write S + read P + write P) to
 zero — the roofline win measured in EXPERIMENTS.md §Perf.
+
+FUSED variant (``hummingbird_fused_kernel_call``): the remaining [B, T]
+score write is folded away too — the tree grid axis accumulates each tile's
+per-sample partial sum into one revisited [BB, 1] output block (init at
+j == 0), so phase 2 never touches HBM.
 """
 
 from __future__ import annotations
@@ -29,10 +34,11 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.common import dense_predicates
 
-__all__ = ["hummingbird_kernel_call"]
+__all__ = ["hummingbird_kernel_call", "hummingbird_fused_kernel_call"]
 
 
-def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, c_ref, d_ref, out_ref):
+def _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, c_ref, d_ref):
+    """One (sample tile x tree tile) of raw per-tree scores [BB, BT]."""
     x = x_ref[...]                        # [BB, F]
     feat = feat_ref[...]                  # [BT, I]
     thr = thr_ref[...]
@@ -50,7 +56,36 @@ def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, c_ref, d_ref, out_ref):
                 preferred_element_type=jnp.float32)              # [BB*BT, L]
     # stage 3: exit-leaf one-hot (P == D) and leaf-value contraction
     onehot = (P == D).astype(jnp.float32).reshape(BB, BT, L)
-    out_ref[...] = jnp.sum(onehot * leaves[None], axis=2)
+    return jnp.sum(onehot * leaves[None], axis=2)
+
+
+def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, c_ref, d_ref, out_ref):
+    out_ref[...] = _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref,
+                                c_ref, d_ref)
+
+
+def _fused_kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, c_ref, d_ref,
+                  out_ref):
+    scores = _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref,
+                          c_ref, d_ref)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.sum(scores, axis=1, keepdims=True)
+
+
+def _in_specs(F, I, L, W_unused, block_b, block_t):
+    return [
+        pl.BlockSpec((block_b, F), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_t, L), lambda i, j: (j, 0)),
+        pl.BlockSpec((I, L), lambda i, j: (0, 0)),
+        pl.BlockSpec((1, L), lambda i, j: (0, 0)),
+    ]
 
 
 def hummingbird_kernel_call(x, feature, threshold, default_left, leaf_value,
@@ -69,16 +104,30 @@ def hummingbird_kernel_call(x, feature, threshold, default_left, leaf_value,
     return pl.pallas_call(
         _kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, F), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_t, L), lambda i, j: (j, 0)),
-            pl.BlockSpec((I, L), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, L), lambda i, j: (0, 0)),
-        ],
+        in_specs=_in_specs(F, I, L, None, block_b, block_t),
         out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        interpret=interpret,
+    )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value, C, D)
+
+
+def hummingbird_fused_kernel_call(x, feature, threshold, default_left,
+                                  leaf_value, C, D, *, block_b, block_t,
+                                  interpret=False):
+    """Fused GEMM traversal + SUM aggregation: returns [B, 1] sums.
+
+    Padding trees carry zero leaves, so they contribute exactly 0.0."""
+    B, F = x.shape
+    T, I = feature.shape
+    L = leaf_value.shape[1]
+    assert B % block_b == 0 and T % block_t == 0
+    grid = (B // block_b, T // block_t)
+
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=_in_specs(F, I, L, None, block_b, block_t),
+        out_specs=pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
         interpret=interpret,
     )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value, C, D)

@@ -15,6 +15,13 @@ arithmetic.  The exit-leaf fetch is one more one-hot select over L.
 Grid: (ceil(B/BB), ceil(T/BT)); each program writes one [BB, BT] tile of raw
 per-tree scores.  Tree tiles are independent => the tree axis can be sharded
 across the mesh 'model' axis (relation-centric plan) with this same kernel.
+
+FUSED variant (``predicated_fused_kernel_call``): phase-2 aggregation moves
+INTO the kernel.  The tree grid axis j revisits one [BB, 1] output block per
+sample tile (initialized at j == 0), accumulating each tree tile's partial
+sum in VMEM — the [B, T] per-tree score matrix never exists in HBM, which is
+the data-movement term the paper's stage-materialization analysis charges
+the unfused path with (Sec. 3.3).
 """
 
 from __future__ import annotations
@@ -27,10 +34,11 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.common import dense_predicates, onehot_select
 
-__all__ = ["predicated_kernel_call"]
+__all__ = ["predicated_kernel_call", "predicated_fused_kernel_call"]
 
 
-def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, out_ref, *, depth):
+def _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, *, depth):
+    """One (sample tile x tree tile) of raw per-tree scores [BB, BT]."""
     x = x_ref[...]                       # [BB, F]
     feat = feat_ref[...]                 # [BT, I]
     thr = thr_ref[...]
@@ -45,15 +53,40 @@ def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, out_ref, *, depth):
     idx = jnp.zeros((BB, BT), jnp.int32)
     for _ in range(depth):                          # unrolled descent
         # go_left = s[b, t, idx]  via per-(b,t) one-hot select over I
-        go_left = jnp.zeros((BB, BT), jnp.float32)
-        # flatten the [BB, BT, I] select: iota compare on the node axis
         n_iota = jax.lax.broadcasted_iota(jnp.int32, (BB, BT, I), 2)
         mask = idx[:, :, None] == n_iota
         go_left = jnp.sum(jnp.where(mask, s_val, 0.0), axis=2)
         idx = 2 * idx + 1 + (1 - go_left.astype(jnp.int32))
 
     leaf = idx - I                                  # [BB, BT] in [0, L)
-    out_ref[...] = onehot_select(leaves, leaf)
+    return onehot_select(leaves, leaf)
+
+
+def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, out_ref, *, depth):
+    out_ref[...] = _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref,
+                                depth=depth)
+
+
+def _fused_kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, out_ref,
+                  *, depth):
+    scores = _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref,
+                          depth=depth)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.sum(scores, axis=1, keepdims=True)
+
+
+def _forest_in_specs(F, I, L, block_b, block_t):
+    return [
+        pl.BlockSpec((block_b, F), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_t, L), lambda i, j: (j, 0)),
+    ]
 
 
 def predicated_kernel_call(x, feature, threshold, default_left, leaf_value,
@@ -69,14 +102,35 @@ def predicated_kernel_call(x, feature, threshold, default_left, leaf_value,
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, F), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_t, L), lambda i, j: (j, 0)),
-        ],
+        in_specs=_forest_in_specs(F, I, L, block_b, block_t),
         out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        interpret=interpret,
+    )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value)
+
+
+def predicated_fused_kernel_call(x, feature, threshold, default_left,
+                                 leaf_value, *, depth, block_b, block_t,
+                                 interpret=False):
+    """Fused traversal + SUM aggregation: returns [B, 1] per-sample sums.
+
+    The tree grid axis is the accumulation axis: its output block index map
+    is constant in j, so the same [BB, 1] block is revisited for every tree
+    tile and accumulated in place (init at j == 0).  Padding trees carry
+    zero leaves, so they add exactly 0.0 to the sum.
+    """
+    B, F = x.shape
+    T, I = feature.shape
+    L = leaf_value.shape[1]
+    assert B % block_b == 0 and T % block_t == 0
+    grid = (B // block_b, T // block_t)
+
+    kernel = functools.partial(_fused_kernel, depth=depth)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=_forest_in_specs(F, I, L, block_b, block_t),
+        out_specs=pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
         interpret=interpret,
     )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value)

@@ -32,7 +32,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.common import dense_predicates
 
-__all__ = ["quickscorer_kernel_call"]
+__all__ = ["quickscorer_kernel_call", "quickscorer_fused_kernel_call"]
 
 
 def _and_reduce(masks):
@@ -43,8 +43,9 @@ def _and_reduce(masks):
     return masks[:, :, 0]
 
 
-def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, bv_ref, out_ref,
-            *, num_words):
+def _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, bv_ref,
+                 *, num_words):
+    """One (sample tile x tree tile) of raw per-tree scores [BB, BT]."""
     x = x_ref[...]                        # [BB, F]
     feat = feat_ref[...]                  # [BT, I]
     thr = thr_ref[...]
@@ -83,7 +84,36 @@ def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, bv_ref, out_ref,
 
     # lowest set bit: bit set AND cumulative count == 1 (no argmax needed)
     first = bits * (jnp.cumsum(bits, axis=2) == 1.0)
-    out_ref[...] = jnp.sum(first * leaves[None], axis=2)
+    return jnp.sum(first * leaves[None], axis=2)
+
+
+def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, bv_ref, out_ref,
+            *, num_words):
+    out_ref[...] = _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref,
+                                bv_ref, num_words=num_words)
+
+
+def _fused_kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, bv_ref,
+                  out_ref, *, num_words):
+    scores = _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref,
+                          bv_ref, num_words=num_words)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.sum(scores, axis=1, keepdims=True)
+
+
+def _in_specs(F, I, L, W, block_b, block_t):
+    return [
+        pl.BlockSpec((block_b, F), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_t, L), lambda i, j: (j, 0)),
+        pl.BlockSpec((I, W), lambda i, j: (0, 0)),
+    ]
 
 
 def quickscorer_kernel_call(x, feature, threshold, default_left, leaf_value,
@@ -104,16 +134,36 @@ def quickscorer_kernel_call(x, feature, threshold, default_left, leaf_value,
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, F), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_t, I), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_t, L), lambda i, j: (j, 0)),
-            pl.BlockSpec((I, W), lambda i, j: (0, 0)),
-        ],
+        in_specs=_in_specs(F, I, L, W, block_b, block_t),
         out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        interpret=interpret,
+    )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value,
+      bitvectors)
+
+
+def quickscorer_fused_kernel_call(x, feature, threshold, default_left,
+                                  leaf_value, bitvectors, *, block_b,
+                                  block_t, interpret=False):
+    """Fused bit-vector traversal + SUM aggregation: returns [B, 1] sums.
+
+    The tree grid axis revisits one [BB, 1] output block per sample tile
+    (init at j == 0); padding trees carry zero leaves so they add 0.0."""
+    B, F = x.shape
+    T, I = feature.shape
+    L = leaf_value.shape[1]
+    W = bitvectors.shape[1]
+    assert B % block_b == 0 and T % block_t == 0
+    assert W * 32 >= L, f"bit width {W*32} < leaves {L}"
+    grid = (B // block_b, T // block_t)
+
+    kernel = functools.partial(_fused_kernel, num_words=W)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=_in_specs(F, I, L, W, block_b, block_t),
+        out_specs=pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
         interpret=interpret,
     )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value,
       bitvectors)

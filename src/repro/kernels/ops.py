@@ -9,9 +9,18 @@ Handles everything the raw kernels assume away:
   * ``interpret=`` defaulting to True off-TPU so the same call validates on
     CPU and runs compiled on real hardware.
 
-The wrappers return RAW per-tree scores [B, T] like ``core.algorithms``;
-phase-2 aggregation stays in ``core.postprocess`` so the kernels are
-drop-in algorithm backends for the query planner.
+Two backend families:
+
+  ``KERNEL_ALGORITHMS`` (unfused) return RAW per-tree scores [B, T] like
+  ``core.algorithms``; phase-2 aggregation stays in ``core.postprocess``.
+
+  ``FUSED_KERNEL_ALGORITHMS`` (``*_pallas_fused``) return the phase-2 SUM
+  [B] directly: aggregation happens in-kernel across the tree grid axis, so
+  the [B, T] score matrix never round-trips HBM (the materialization cost
+  the paper charges stage boundaries with, Sec. 3.3).  Tree padding is
+  correct for both SUM and MEAN: padding trees carry zero leaves (add 0.0
+  to the sum) and MEAN divides by the TRUE tree count downstream
+  (``core.postprocess.postprocess(num_trees=...)``).
 """
 
 from __future__ import annotations
@@ -24,16 +33,24 @@ import numpy as np
 
 from repro.core.forest import Forest, hb_path_matrix, qs_bitvectors
 from repro.kernels.common import block_heuristics
-from repro.kernels.forest_predicated import predicated_kernel_call
-from repro.kernels.forest_hummingbird import hummingbird_kernel_call
-from repro.kernels.forest_quickscorer import quickscorer_kernel_call
+from repro.kernels.forest_predicated import (predicated_fused_kernel_call,
+                                             predicated_kernel_call)
+from repro.kernels.forest_hummingbird import (hummingbird_fused_kernel_call,
+                                              hummingbird_kernel_call)
+from repro.kernels.forest_quickscorer import (quickscorer_fused_kernel_call,
+                                              quickscorer_kernel_call)
 
 __all__ = [
     "predicated_pallas",
     "hummingbird_pallas",
     "quickscorer_pallas",
+    "predicated_pallas_fused",
+    "hummingbird_pallas_fused",
+    "quickscorer_pallas_fused",
     "KERNEL_ALGORITHMS",
+    "FUSED_KERNEL_ALGORITHMS",
     "predict_raw_pallas",
+    "predict_sum_pallas",
 ]
 
 
@@ -59,39 +76,67 @@ def _pad_forest_arrays(feature, threshold, default_left, leaf_value, block_t):
     return feature, threshold, default_left, leaf_value
 
 
+# The structure-tensor caches hold HOST numpy arrays: the first call can
+# happen inside a jit trace, and memoizing the jnp conversion there would
+# leak a DynamicJaxprTracer into later traces.  jnp.asarray at the use site
+# is a free constant embed under trace and a cached transfer in eager mode.
 @functools.lru_cache(maxsize=16)
-def _hb_tensors(depth: int):
+def _hb_tensors_np(depth: int):
     C, D = hb_path_matrix(depth)
-    return (jnp.asarray(C, jnp.float32),
-            jnp.asarray(D[None, :], jnp.float32))
+    return (np.asarray(C, np.float32), np.asarray(D[None, :], np.float32))
+
+
+def _hb_tensors(depth: int):
+    C, D = _hb_tensors_np(depth)
+    return jnp.asarray(C), jnp.asarray(D)
 
 
 @functools.lru_cache(maxsize=16)
+def _qs_tensors_np(depth: int):
+    return qs_bitvectors(depth)
+
+
 def _qs_tensors(depth: int):
-    return jnp.asarray(qs_bitvectors(depth))
+    return jnp.asarray(_qs_tensors_np(depth))
 
 
-def _blocks(forest: Forest, B, block_b, block_t):
+def _blocks(forest: Forest, B, block_b, block_t, *, fused=False):
+    """Block selection.  Fused kernels get a higher tree-block cap: their
+    output tile is [BB, 1] regardless of BT (in-kernel aggregation), so
+    enlarging the tree tile costs no output bandwidth and cuts the number
+    of accumulator-block passes — strictly better as long as the predicate
+    working set fits VMEM (``block_heuristics`` still shrinks on overflow).
+    """
     T, I = forest.feature.shape
     if block_b is None or block_t is None:
         hb, ht = block_heuristics(B, T, I, forest.num_leaves,
-                                  forest.n_features)
+                                  forest.n_features,
+                                  max_block_t=32 if fused else 8)
         block_b = block_b or hb
         block_t = block_t or ht
     return block_b, block_t
 
 
-def _run(kind: str, forest: Forest, x: jax.Array, *, block_b=None,
-         block_t=None, interpret=None) -> jax.Array:
+def _prepared(forest: Forest, x: jax.Array, block_b, block_t, interpret,
+              *, fused=False):
+    """Shared padding + block selection for both backend families."""
     if interpret is None:
         interpret = not _on_tpu()
     B = x.shape[0]
-    T = forest.num_trees
-    block_b, block_t = _blocks(forest, B, block_b, block_t)
+    block_b, block_t = _blocks(forest, B, block_b, block_t, fused=fused)
     xp = _pad_axis(x, 0, block_b)
     fe, th, dl, lv = _pad_forest_arrays(
         forest.feature, forest.threshold, forest.default_left,
         forest.leaf_value, block_t)
+    return xp, fe, th, dl, lv, block_b, block_t, interpret
+
+
+def _run(kind: str, forest: Forest, x: jax.Array, *, block_b=None,
+         block_t=None, interpret=None) -> jax.Array:
+    B = x.shape[0]
+    T = forest.num_trees
+    xp, fe, th, dl, lv, block_b, block_t, interpret = _prepared(
+        forest, x, block_b, block_t, interpret)
 
     if kind == "predicated":
         raw = predicated_kernel_call(
@@ -112,14 +157,51 @@ def _run(kind: str, forest: Forest, x: jax.Array, *, block_b=None,
     return raw[:B, :T]
 
 
+def _run_fused(kind: str, forest: Forest, x: jax.Array, *, block_b=None,
+               block_t=None, interpret=None) -> jax.Array:
+    """Fused predict + SUM: [B] raw-margin sums, no [B, T] materialization."""
+    B = x.shape[0]
+    xp, fe, th, dl, lv, block_b, block_t, interpret = _prepared(
+        forest, x, block_b, block_t, interpret, fused=True)
+
+    if kind == "predicated":
+        summed = predicated_fused_kernel_call(
+            xp, fe, th, dl, lv, depth=forest.depth,
+            block_b=block_b, block_t=block_t, interpret=interpret)
+    elif kind == "hummingbird":
+        C, D = _hb_tensors(forest.depth)
+        summed = hummingbird_fused_kernel_call(
+            xp, fe, th, dl, lv, C, D,
+            block_b=block_b, block_t=block_t, interpret=interpret)
+    elif kind == "quickscorer":
+        bv = _qs_tensors(forest.depth)
+        summed = quickscorer_fused_kernel_call(
+            xp, fe, th, dl, lv, bv,
+            block_b=block_b, block_t=block_t, interpret=interpret)
+    else:
+        raise ValueError(f"unknown kernel {kind!r}")
+    # padding trees sum to 0.0, so only the sample axis needs un-padding
+    return summed[:B, 0]
+
+
 predicated_pallas = functools.partial(_run, "predicated")
 hummingbird_pallas = functools.partial(_run, "hummingbird")
 quickscorer_pallas = functools.partial(_run, "quickscorer")
+
+predicated_pallas_fused = functools.partial(_run_fused, "predicated")
+hummingbird_pallas_fused = functools.partial(_run_fused, "hummingbird")
+quickscorer_pallas_fused = functools.partial(_run_fused, "quickscorer")
 
 KERNEL_ALGORITHMS = {
     "predicated_pallas": predicated_pallas,
     "hummingbird_pallas": hummingbird_pallas,
     "quickscorer_pallas": quickscorer_pallas,
+}
+
+FUSED_KERNEL_ALGORITHMS = {
+    "predicated_pallas_fused": predicated_pallas_fused,
+    "hummingbird_pallas_fused": hummingbird_pallas_fused,
+    "quickscorer_pallas_fused": quickscorer_pallas_fused,
 }
 
 
@@ -131,4 +213,17 @@ def predict_raw_pallas(forest: Forest, x: jax.Array,
         raise ValueError(
             f"unknown kernel algorithm {algorithm!r}; "
             f"options {sorted(KERNEL_ALGORITHMS)}")
+    return fn(forest, x, **kw)
+
+
+def predict_sum_pallas(forest: Forest, x: jax.Array,
+                       algorithm: str = "hummingbird_pallas_fused",
+                       **kw) -> jax.Array:
+    """[B] summed raw margins via a fused backend (no [B, T] round-trip)."""
+    try:
+        fn = FUSED_KERNEL_ALGORITHMS[algorithm]
+    except KeyError:
+        raise ValueError(
+            f"unknown fused kernel algorithm {algorithm!r}; "
+            f"options {sorted(FUSED_KERNEL_ALGORITHMS)}")
     return fn(forest, x, **kw)

@@ -20,6 +20,7 @@ from repro.core.train import TrainConfig, train_forest
 from repro.db.loader import (load_array_rows_external, load_csv_external,
                              load_libsvm_external, synth_dataset,
                              write_array_rows, write_csv, write_libsvm)
+from repro.db.operators import TRACE_STATS
 from repro.db.query import ForestQueryEngine
 from repro.db.store import TensorBlockStore
 
@@ -73,6 +74,101 @@ def test_model_reuse_skips_partition(setup):
     assert r2.partition_s == 0.0
     np.testing.assert_allclose(np.asarray(r1.predictions),
                                np.asarray(r2.predictions))
+
+
+FUSED = ["predicated_pallas_fused", "hummingbird_pallas_fused",
+         "quickscorer_pallas_fused"]
+
+
+@pytest.mark.parametrize("plan", PLANS)
+@pytest.mark.parametrize("algorithm", FUSED)
+def test_fused_plans_agree_with_direct(setup, plan, algorithm):
+    """Fused in-kernel aggregation backends through every physical plan."""
+    store, forest, x = setup
+    engine = ForestQueryEngine(store, reuse_cache=ModelReuseCache(),
+                               plan_cache=ModelReuseCache())
+    res = engine.infer("test", forest, algorithm=algorithm, plan=plan)
+    base = algorithm.replace("_pallas_fused", "")
+    direct = predict_proba(forest, jnp.asarray(x), algorithm=base)
+    np.testing.assert_allclose(np.asarray(res.predictions),
+                               np.asarray(direct), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("plan", ["udf", "rel+reuse"])
+def test_compiled_plan_cache_no_retrace(setup, plan):
+    """Second identical query: reuse_hit, zero partition time, and ZERO
+    re-traces of any stage function (the compile counter must not move)."""
+    store, forest, x = setup
+    engine = ForestQueryEngine(store, reuse_cache=ModelReuseCache(),
+                               plan_cache=ModelReuseCache())
+    kw = dict(algorithm="hummingbird_pallas_fused", plan=plan,
+              model_id="plan-cache-m1")
+    r1 = engine.infer("test", forest, **kw)
+    assert not r1.plan_reuse_hit
+    traces_after_first = TRACE_STATS["traces"]
+    assert traces_after_first > 0
+
+    r2 = engine.infer("test", forest, **kw)
+    assert r2.reuse_hit and r2.plan_reuse_hit
+    assert r2.partition_s == 0.0
+    assert TRACE_STATS["traces"] == traces_after_first, "stage re-traced"
+    np.testing.assert_allclose(np.asarray(r1.predictions),
+                               np.asarray(r2.predictions))
+
+
+def test_plan_cache_distinguishes_batch_shape(setup):
+    """A different page batching is a different executable: no false hit."""
+    store, forest, _ = setup
+    engine = ForestQueryEngine(store, reuse_cache=ModelReuseCache(),
+                               plan_cache=ModelReuseCache())
+    r1 = engine.infer("test", forest, plan="udf", model_id="m-bs")
+    r2 = engine.infer("test", forest, plan="udf", model_id="m-bs",
+                      batch_pages=2)
+    assert not r2.plan_reuse_hit
+    np.testing.assert_allclose(np.asarray(r1.predictions),
+                               np.asarray(r2.predictions), rtol=1e-6)
+
+
+def test_plan_cache_not_stale_after_model_eviction(setup):
+    """If the model cache evicts and rebuilds a materialization, the plan
+    cache must MISS (its stages close over the old mat) — partition cost
+    is honestly reported and no stale executable is served."""
+    store, forest, x = setup
+    rng = np.random.default_rng(3)
+    y2 = (x @ rng.normal(size=x.shape[1]).astype(np.float32) > 0)
+    forest2 = train_forest(x, y2.astype(np.float32),
+                           TrainConfig(model_type="xgboost", num_trees=8,
+                                       max_depth=3))
+    engine = ForestQueryEngine(store,
+                               reuse_cache=ModelReuseCache(max_entries=1),
+                               plan_cache=ModelReuseCache())
+    kw = dict(algorithm="predicated", plan="rel+reuse")
+    r1 = engine.infer("test", forest, model_id="mA", **kw)
+    engine.infer("test", forest2, model_id="mB", **kw)   # evicts mA's mat
+    r3 = engine.infer("test", forest, model_id="mA", **kw)
+    assert not r3.reuse_hit and not r3.plan_reuse_hit
+    assert r3.partition_s > 0.0
+    np.testing.assert_allclose(np.asarray(r3.predictions),
+                               np.asarray(r1.predictions))
+
+
+def test_reuse_cache_is_lru_not_fifo():
+    """A hit must refresh recency: with capacity 2, touching A before
+    inserting C must evict B (FIFO would evict the hot A)."""
+    import dataclasses as _dc
+
+    @_dc.dataclass
+    class E:
+        v: int
+        build_time_s: float = 0.0
+
+    cache = ModelReuseCache(max_entries=2)
+    cache.get_or_build(("A",), lambda: E(1))
+    cache.get_or_build(("B",), lambda: E(2))
+    cache.get_or_build(("A",), lambda: E(-1))      # hit: refresh A
+    cache.get_or_build(("C",), lambda: E(3))       # evicts B, not A
+    assert cache.get_or_build(("A",), lambda: E(-2)).v == 1, "hot A evicted"
+    assert cache.get_or_build(("B",), lambda: E(4)).v == 4, "B survived"
 
 
 def test_batching_equivalence(setup):

@@ -74,11 +74,32 @@ def test_kernel_dtype_sweep(rng, dtype):
                                rtol=1e-5, atol=1e-5)
 
 
+def _model_words(bb, bt, I, L, F, f_eff):
+    return (bb * F + 3 * bt * I + bt * I * f_eff + 2 * bb * bt * I
+            + bt * L + bb * bt)
+
+
 def test_block_heuristics_fit_budget():
     from repro.kernels.common import block_heuristics
     bb, bt = block_heuristics(4096, 1600, 255, 256, 2000)
     assert bb >= 1 and bt >= 1
-    # the returned blocks actually fit the budget
-    words = (bb * 2000 + 3 * bt * 255 + bt * 255 * 2000
-             + 2 * bb * bt * 255 + bt * 256 + bb * bt)
+    # the returned blocks actually fit the budget (one-hot modeled at the
+    # per-tree used-feature cap, min(F, I) = 255)
+    words = _model_words(bb, bt, 255, 256, 2000, 255)
     assert words * 4 <= 12 * 1024 * 1024 or (bb == 1 or bt == 1)
+
+
+def test_block_heuristics_wide_sparse_sane():
+    """criteo scale (F = 10k): the naive bt*I*F one-hot term drove blocks
+    to (8, 1), starving the MXU; capping the modeled F at the per-tree
+    used-feature bound (<= I) must keep sample blocks large."""
+    from repro.kernels.common import block_heuristics
+    bb, bt = block_heuristics(4096, 1600, 255, 256, 10_000)
+    assert bb >= 64, (bb, bt)
+    assert bt >= 2, (bb, bt)
+    words = _model_words(bb, bt, 255, 256, 10_000, 255)
+    assert words * 4 <= 12 * 1024 * 1024
+    # an explicit per-tree used-feature count tightens the cap further
+    bb2, bt2 = block_heuristics(4096, 1600, 255, 256, 10_000,
+                                used_features=64)
+    assert bb2 >= bb and bt2 >= bt

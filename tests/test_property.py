@@ -5,7 +5,10 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.algorithms import naive_predict, predict_raw
 from repro.core.forest import make_forest, pad_trees
