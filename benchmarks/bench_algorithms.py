@@ -83,7 +83,10 @@ def run_fused(dataset="higgs", trees=FUSED_TREE_GRID, batch=512, iters=3):
 
     Returns (rows, records): rows in the common CSV schema, records as the
     BENCH_fused.json trajectory entries {trees, algorithm, unfused_s,
-    fused_s, speedup, batch, backend}.
+    fused_s, bf16_s, speedup, bf16_speedup, batch, backend}.  The bf16
+    row stages the tree tiles (thresholds/leaves) at half width with f32
+    accumulation — off-TPU the timing mostly tracks the cast overhead;
+    on TPU it is the tree-tile VMEM/bandwidth shrink record.
     """
     from repro.kernels.ops import FUSED_KERNEL_ALGORITHMS, KERNEL_ALGORITHMS
 
@@ -98,6 +101,8 @@ def run_fused(dataset="higgs", trees=FUSED_TREE_GRID, batch=512, iters=3):
             ffn = FUSED_KERNEL_ALGORITHMS[fname]
             unfused = jax.jit(lambda xx, f=kfn: aggregate_raw(f(forest, xx)))
             fused = jax.jit(lambda xx, f=ffn: f(forest, xx))
+            fused_bf16 = jax.jit(
+                lambda xx, f=ffn: f(forest, xx, tree_dtype=jnp.bfloat16))
 
             def best(fn):
                 jax.block_until_ready(fn(x))        # compile + warm
@@ -108,9 +113,10 @@ def run_fused(dataset="higgs", trees=FUSED_TREE_GRID, batch=512, iters=3):
                     times.append(time.perf_counter() - t0)
                 return min(times)
 
-            t_un, t_fu = best(unfused), best(fused)
+            t_un, t_fu, t_bf = best(unfused), best(fused), best(fused_bf16)
             for plat, dt, fn in ((f"pallas-{name}+agg", t_un, unfused),
-                                 (f"pallas-{fname}", t_fu, fused)):
+                                 (f"pallas-{fname}", t_fu, fused),
+                                 (f"pallas-{fname}-bf16", t_bf, fused_bf16)):
                 rows.append(dict(dataset=dataset, model="xgboost", trees=T,
                                  platform=plat, load_s=0.0,
                                  infer_s=round(dt, 5), write_s=0.0,
@@ -120,7 +126,10 @@ def run_fused(dataset="higgs", trees=FUSED_TREE_GRID, batch=512, iters=3):
                                 backend=backend,
                                 unfused_s=round(t_un, 5),
                                 fused_s=round(t_fu, 5),
-                                speedup=round(t_un / max(t_fu, 1e-9), 3)))
+                                bf16_s=round(t_bf, 5),
+                                speedup=round(t_un / max(t_fu, 1e-9), 3),
+                                bf16_speedup=round(t_un / max(t_bf, 1e-9),
+                                                   3)))
     return rows, records
 
 

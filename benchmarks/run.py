@@ -71,6 +71,17 @@ def main() -> None:
     C.print_rows(rows, extra_cols=("file_kind",))
     summary += _summary(rows, "tab7-9")
 
+    print("\n## Sparse plane: CSR pages + gather prepass vs dense fallback")
+    rows, sparse_records = bench_wide_sparse.run_sparse(
+        trees=(trees[0],) if args.fast else trees[:2], scale=scale)
+    C.print_rows(rows, extra_cols=("file_kind",))
+    sparse_path = bench_wide_sparse.write_sparse_json(sparse_records)
+    for r in sparse_records:
+        summary.append(C.csv_line(
+            f"sparse/{r['dataset']}/trees{r['trees']}", r["csr_total_s"],
+            f"csr_vs_dense={r['csr_vs_dense']}x density={r['density']}"))
+    print(f"# sparse trajectory -> {sparse_path}")
+
     from benchmarks import bench_algorithms
     print("\n## Tab10: single-device inference-only algorithm comparison")
     rows = bench_algorithms.run(trees=trees, batch=1024)
@@ -78,6 +89,18 @@ def main() -> None:
     for r in rows:
         summary.append(C.csv_line(
             f"tab10/{r['platform']}/trees{r['trees']}", r["infer_s"]))
+
+    print("\n## Fused-vs-unfused kernel trajectory (BENCH_fused.json)")
+    rows, fused_records = bench_algorithms.run_fused(
+        trees=(trees[-1],) if args.fast else bench_algorithms.FUSED_TREE_GRID,
+        batch=256 if args.fast else 512, iters=3 if args.fast else 5)
+    C.print_rows(rows)
+    fused_path = bench_algorithms.write_fused_json(fused_records)
+    for r in fused_records:
+        summary.append(C.csv_line(
+            f"fused/{r['algorithm']}/trees{r['trees']}", r["fused_s"],
+            f"speedup={r['speedup']}x bf16_speedup={r['bf16_speedup']}x"))
+    print(f"# fused trajectory -> {fused_path}")
 
     from benchmarks import bench_conversion
     print("\n## Fig8: model conversion + loading overheads")

@@ -40,6 +40,8 @@ __all__ = [
     "qs_bitvectors",
     "pad_trees",
     "tree_slice",
+    "used_feature_counts",
+    "compact_forest",
 ]
 
 
@@ -282,6 +284,78 @@ def qs_bitvectors(depth: int) -> np.ndarray:
                 i = anc[l, d]
                 bv[i, l // 32] &= ~np.uint32(1 << (l % 32))
     return bv
+
+
+# ---------------------------------------------------------------------------
+# Used-feature compaction (the wide-sparse data plane's model half).
+# ---------------------------------------------------------------------------
+#
+# A depth-d tree tests at most 2^d - 1 distinct features, so a forest over
+# criteo-scale F touches only a tiny slice of the feature space (Yggdrasil
+# DF's per-tree "used feature" compaction is the same observation).  We
+# compact at FOREST granularity: remap every split's feature id into the
+# sorted union of features the forest actually tests, and publish that
+# union as a gather index table.  The inference contract is then
+#
+#     predict(forest, x)  ==  predict(compact, x[:, gather_idx])
+#
+# for every backend, because node n reads x_compact[inv[f_n]] =
+# x[gather_idx[inv[f_n]]] = x[f_n].  The feature-gather prepass
+# (kernels/gather.py) produces x_compact directly from CSR pages, so the
+# kernels' in-VMEM one-hot shrinks from [BT, I, F] to [BT, I, F_used] —
+# the difference between criteo-scale F being modeled and being real.
+#
+# Invariants (asserted by tests/test_sparse.py):
+#   * gather_idx is sorted and duplicate-free over its first F_used slots
+#     (padding slots repeat gather_idx[0] and are never referenced by any
+#     remapped split);
+#   * completed pass-through nodes (threshold == +inf) are excluded from
+#     the used set — their feature slot is never read;
+#   * per-tree used counts never exceed num_internal(depth).
+
+
+def used_feature_counts(forest: Forest) -> np.ndarray:
+    """[T] number of DISTINCT features each tree really tests.
+
+    Pass-through completion nodes (threshold +inf) don't count: their
+    predicate is constant.  This is the honest ``used_features`` bound for
+    ``kernels.common.block_heuristics`` and the per-tree compaction stat.
+    """
+    feat = np.asarray(jax.device_get(forest.feature))
+    real = np.isfinite(np.asarray(jax.device_get(forest.threshold)))
+    return np.array([np.unique(feat[t][real[t]]).size
+                     for t in range(feat.shape[0])], np.int64)
+
+
+def compact_forest(forest: Forest, *, pad_to: int = 8
+                   ) -> tuple[Forest, np.ndarray]:
+    """Remap split features into the forest's used-feature union.
+
+    Returns (compact forest with n_features = F_used padded to ``pad_to``,
+    gather_idx [F_used_padded] int32).  ``x[:, gather_idx]`` (or the CSR
+    gather prepass) produces the matching compact sample block.  Padding
+    slots repeat gather_idx[0] so the index table stays valid for a plain
+    column gather; no remapped split ever points at them.
+    """
+    feat = np.asarray(jax.device_get(forest.feature))
+    real = np.isfinite(np.asarray(jax.device_get(forest.threshold)))
+    used = np.unique(feat[real])
+    if used.size == 0:
+        used = np.zeros(1, feat.dtype)          # degenerate all-pass forest
+    f_used = used.size
+    pad = (-f_used) % max(pad_to, 1)
+    gather_idx = np.concatenate(
+        [used, np.full(pad, used[0], used.dtype)]).astype(np.int32)
+    inv = np.zeros(forest.n_features, np.int32)
+    inv[used] = np.arange(f_used, dtype=np.int32)
+    # pass-through nodes keep whatever slot their (ignored) feature maps to
+    remapped = inv[np.clip(feat, 0, forest.n_features - 1)]
+    compact = dataclasses.replace(
+        forest,
+        feature=jnp.asarray(remapped, jnp.int32),
+        n_features=int(gather_idx.size),
+    )
+    return compact, gather_idx
 
 
 # ---------------------------------------------------------------------------

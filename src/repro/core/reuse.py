@@ -116,14 +116,24 @@ class ModelReuseCache:
             self._entries.pop(evict, None)
         return entry
 
-    def invalidate(self, model_id: str | None = None) -> int:
-        """Drop entries (all, or those for one model). Returns count."""
+    def invalidate(self, model_id: str | None = None, *,
+                   key_index: int = 0) -> int:
+        """Drop entries (all, or those for one model). Returns count.
+
+        ``key_index`` is where the model id sits in this cache's keys:
+        0 for the model cache's ``(model_id, ...)`` keys, 1 for the plan
+        cache's ``(kind_tag, model_id, ...)`` keys.  Matching only
+        ``key[0]`` against plan keys silently misses every entry (the
+        kind tag never equals a model id) — which is why the engine-level
+        sweep (``db.query.ForestQueryEngine.invalidate``) exists.
+        """
         if model_id is None:
             n = len(self._entries)
             self._entries.clear()
             self._order.clear()
             return n
-        victims = [k for k in self._order if k[0] == model_id]
+        victims = [k for k in self._order
+                   if len(k) > key_index and k[key_index] == model_id]
         for k in victims:
             self._entries.pop(k, None)
             self._order.remove(k)

@@ -23,10 +23,21 @@ kernel level.
 
 Compiled-plan cache: ``ModelReuseCache`` generalized from the partition
 stage's OUTPUT to the whole plan's EXECUTABLE.  The jitted stage list —
-keyed on (model fingerprint, algorithm, plan, batch signature, mesh) — is
-built once; steady-state queries skip partitioning AND tracing/compilation
-(the first-query vs steady-state distinction of Sec. 3.3, lifted one level).
-``rel`` deliberately stays uncached: it is the paper's no-reuse baseline.
+keyed on (model fingerprint, algorithm, plan, STORAGE FORMAT, batch
+signature, mesh) — is built once; steady-state queries skip partitioning
+AND tracing/compilation (the first-query vs steady-state distinction of
+Sec. 3.3, lifted one level).  ``rel`` deliberately stays uncached: it is
+the paper's no-reuse baseline.
+
+Sparse data plane: a dataset stored as CSR pages (``store.put_sparse``)
+runs the SAME logical plans through a feature-gather prepass — the plan
+compacts the forest onto its used-feature union (``core.forest.
+compact_forest``), scatters each CSR page block into dense
+``[rows, F_used]`` compact tiles (``kernels.gather``), and feeds the
+existing (fused) kernels.  The ``[BT, I, F]`` one-hot never exists at
+full F, so criteo-scale feature counts execute instead of being modeled.
+Dense and CSR plans over the same model are distinct cache entries (the
+storage format is part of both cache keys).
 
 Each stage is timed and its materialized bytes recorded, reproducing the
 paper's latency breakdowns.  On a mesh the plans run under ``shard_map`` so
@@ -49,13 +60,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import algorithms as algs
 from repro.core import postprocess as post
-from repro.core.forest import (Forest, hb_path_matrix, pad_trees,
-                               qs_bitvectors, tree_slice)
+from repro.core.forest import (Forest, compact_forest, hb_path_matrix,
+                               pad_trees, qs_bitvectors, tree_slice)
 from repro.core.reuse import (GLOBAL_CACHE, GLOBAL_PLAN_CACHE,
                               MaterializedModel, ModelReuseCache,
                               fingerprint_forest, mesh_signature)
 from repro.db.operators import Operator, StageReport, run_stages, split_into_stages
 from repro.db.store import TensorBlockStore
+from repro.kernels.gather import csr_block_to_dense, gather_inverse_map
 
 __all__ = ["QueryResult", "CompiledQueryPlan", "ForestQueryEngine"]
 
@@ -74,6 +86,7 @@ class QueryResult:
     total_s: float
     reuse_hit: bool = False           # model-cache OR plan-cache hit
     plan_reuse_hit: bool = False      # compiled-plan cache hit specifically
+    storage_format: str = "dense"     # which data plane executed (dense/csr)
 
     def breakdown(self) -> dict[str, float]:
         return {
@@ -157,12 +170,58 @@ class ForestQueryEngine:
         return fp
 
     # ------------------------------------------------------------------
+    # cache sweeping (paper: model updates must drop BOTH materializations)
+    # ------------------------------------------------------------------
+    def invalidate(self, model_id: str | None = None) -> int:
+        """Sweep BOTH the partition-model cache and the compiled-plan
+        cache (all entries, or one model's).  Returns entries dropped.
+
+        The raw ``ModelReuseCache.invalidate`` matches ``key[0]``, but
+        plan keys lead with a kind tag (``'udf-plan'``/``'rel-plan'``) and
+        carry the model id at ``key[1]`` — a key[0]-only sweep silently
+        leaves every compiled plan (and the device buffers its stages
+        close over) alive.  This is the engine-level sweep that gets both.
+        """
+        n = self.cache.invalidate(model_id)
+        n += self.plan_cache.invalidate(model_id, key_index=1)
+        return n
+
+    # ------------------------------------------------------------------
+    # sparse prepass (the wide-sparse data plane's plan-build half)
+    # ------------------------------------------------------------------
+    def _sparse_prepass(self, forest: Forest):
+        """Compact the forest onto its used-feature union and build the
+        CSR gather's inverse map.  Host-side, once per plan build (cached
+        with the plan/materialization, like the partition stage)."""
+        cf, gather_idx = compact_forest(forest)
+        inv_map = jnp.asarray(gather_inverse_map(gather_idx,
+                                                 forest.n_features))
+        return cf, inv_map, int(gather_idx.size)
+
+    def _gather_operator(self, inv_map: jax.Array, f_used: int) -> Operator:
+        """SCAN-side feature-gather prepass: CSR page block -> dense
+        compact tile.  Not a breaker — it fuses into the same jitted
+        stage as the kernel call (no extra materialization boundary)."""
+
+        def gather(state):
+            state = dict(state)
+            state["x"] = csr_block_to_dense(state["x"], inv_map, f_used)
+            return state
+
+        return Operator("gather:csr-compact", gather)
+
+    # ------------------------------------------------------------------
     # model partition stage (the reusable one)
     # ------------------------------------------------------------------
     def _partition_model(self, forest: Forest, algorithm: str,
-                         num_parts: int) -> MaterializedModel:
-        forest_p, true_T = pad_trees(forest, num_parts)
+                         num_parts: int, *,
+                         storage_format: str = "dense") -> MaterializedModel:
         aux: dict[str, Any] = {}
+        if storage_format == "csr":
+            forest, inv_map, f_used = self._sparse_prepass(forest)
+            aux["inv_map"] = inv_map
+            aux["f_used"] = f_used
+        forest_p, true_T = pad_trees(forest, num_parts)
         if "hummingbird" in algorithm:
             C, D = hb_path_matrix(forest_p.depth)
             aux["C"] = jnp.asarray(C, jnp.float32)
@@ -185,7 +244,8 @@ class ForestQueryEngine:
     # ------------------------------------------------------------------
     # plan bodies
     # ------------------------------------------------------------------
-    def _udf_ops(self, forest: Forest, algorithm: str, true_T: int):
+    def _udf_ops(self, forest: Forest, algorithm: str, true_T: int,
+                 gather: Operator | None = None):
         predict_sum, _ = _predict_sum_fn(algorithm)
         meta = dict(model_type=forest.model_type, task=forest.task,
                     num_trees=true_T, base_score=forest.base_score)
@@ -196,11 +256,14 @@ class ForestQueryEngine:
             state["pred"] = post.postprocess(predict_sum(forest, x), **meta)
             return state
 
-        return [
-            Operator("scan", lambda s: s),
+        ops = [Operator("scan", lambda s: s)]
+        if gather is not None:
+            ops.append(gather)
+        ops += [
             Operator("transform:forest-udf", udf),
             Operator("write", lambda s: s, breaker=True),
         ]
+        return ops
 
     def _rel_ops(self, mat: MaterializedModel, algorithm: str):
         predict_sum, fused = _predict_sum_fn(algorithm)
@@ -250,14 +313,21 @@ class ForestQueryEngine:
             state["pred"] = post.postprocess(state.pop("summed"), **meta)
             return state
 
-        return [
-            Operator("scan", lambda s: s),
+        ops = [Operator("scan", lambda s: s)]
+        if "inv_map" in mat.aux:
+            # sparse plane: the gather prepass shares the cross-product
+            # stage (the compact tile is its VMEM input, not a new
+            # materialization boundary)
+            ops.append(self._gather_operator(mat.aux["inv_map"],
+                                             mat.aux["f_used"]))
+        ops += [
             Operator("cross-product:partial-agg", cross_product,
                      breaker=True),
             Operator("aggregate", aggregate, breaker=True),
             Operator("postprocess", postprocess_op),
             Operator("write", lambda s: s, breaker=True),
         ]
+        return ops
 
     # ------------------------------------------------------------------
     # entry point
@@ -277,14 +347,22 @@ class ForestQueryEngine:
         if plan not in ("udf", "rel", "rel+reuse"):
             raise ValueError(f"unknown plan {plan!r}")
         ds = self.store.get(dataset)
+        fmt = getattr(ds, "storage_format", "dense")
         t_query0 = time.perf_counter()
         batch_pages = batch_pages or ds.num_pages
 
         # the batch signature pins every block shape the stage jits will
-        # see, so a plan-cache hit implies zero re-tracing
+        # see, so a plan-cache hit implies zero re-tracing.  The storage
+        # format itself is a SEPARATE plan-key component (a dense and a
+        # CSR plan over the same model are different executables); the
+        # CSR signature additionally pins the per-page entry capacity.
         mesh_id = mesh_signature(self.mesh)
-        batch_sig = (ds.data.shape[1], ds.num_pages, ds.page_rows,
-                     batch_pages)
+        if fmt == "csr":
+            batch_sig = (ds.num_features, ds.pages.capacity,
+                         ds.num_pages, ds.page_rows, batch_pages)
+        else:
+            batch_sig = (ds.data.shape[1], ds.num_pages,
+                         ds.page_rows, batch_pages)
 
         partition_s = 0.0
         model_hit = False
@@ -293,12 +371,17 @@ class ForestQueryEngine:
 
         if plan == "udf":
             mid = self._model_key(forest, model_id)
-            pkey = ("udf-plan", mid, algorithm, batch_sig, mesh_id)
+            pkey = ("udf-plan", mid, algorithm, fmt, batch_sig, mesh_id)
 
             def build_udf() -> CompiledQueryPlan:
-                fp, true_T = pad_trees(forest, 1)
+                f, gather = forest, None
+                if fmt == "csr":
+                    cf, inv_map, f_used = self._sparse_prepass(forest)
+                    f = cf
+                    gather = self._gather_operator(inv_map, f_used)
+                fp, true_T = pad_trees(f, 1)
                 stages = split_into_stages(
-                    self._udf_ops(fp, algorithm, true_T))
+                    self._udf_ops(fp, algorithm, true_T, gather=gather))
                 return CompiledQueryPlan(stages=stages,
                                          num_stages=len(stages))
 
@@ -312,14 +395,15 @@ class ForestQueryEngine:
             t0 = time.perf_counter()
             if plan == "rel+reuse":
                 mid = self._model_key(forest, model_id)
-                mkey = (mid, algorithm, n_parts, mesh_id)
+                mkey = (mid, algorithm, n_parts, mesh_id, fmt)
                 before_hits = self.cache.stats.hits
                 mat = self.cache.get_or_build(
-                    mkey, lambda: self._partition_model(forest, algorithm,
-                                                        n_parts))
+                    mkey, lambda: self._partition_model(
+                        forest, algorithm, n_parts, storage_format=fmt))
                 model_hit = self.cache.stats.hits > before_hits
             else:
-                mat = self._partition_model(forest, algorithm, n_parts)
+                mat = self._partition_model(forest, algorithm, n_parts,
+                                            storage_format=fmt)
             partition_s = time.perf_counter() - t0
             prefix_reports = [StageReport(
                 name="stageP:model-partition",
@@ -339,8 +423,8 @@ class ForestQueryEngine:
                 # pinned for the entry's lifetime — the stage closures
                 # alone only capture mat.forest, which would let the
                 # wrapper be freed and its id reused
-                pkey = ("rel-plan", mid, algorithm, n_parts, batch_sig,
-                        mesh_id, id(mat))
+                pkey = ("rel-plan", mid, algorithm, n_parts, fmt,
+                        batch_sig, mesh_id, id(mat))
 
                 def build_rel() -> CompiledQueryPlan:
                     stages = split_into_stages(self._rel_ops(mat, algorithm))
@@ -399,4 +483,5 @@ class ForestQueryEngine:
             total_s=total_s,
             reuse_hit=reuse_hit,
             plan_reuse_hit=plan_hit,
+            storage_format=fmt,
         )

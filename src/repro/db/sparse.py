@@ -1,0 +1,196 @@
+"""CSR tensor-block pages: the sparse data plane's storage format.
+
+The paper's wide-sparse workloads (Bosch F=968 @ 81% missing, Criteo
+F=1M LIBSVM) are exactly where the external load/convert cost dominates
+end-to-end latency — and where densifying on ingest (the dense store's
+``[N, F]`` layout) multiplies both the host working set and the
+host->device transfer by ``1 / density``.  This module keeps the data
+compressed end to end: the store holds CSR pages on device and the
+feature-gather prepass (``kernels/gather.py``) expands each page block
+straight into the *compact* per-forest feature space, never into ``F``.
+
+Layout: a sparse dataset is THREE device arrays with a fixed per-page
+entry capacity
+
+    indptr   [P, R+1] int32   row offsets WITHIN the page (indptr[p,0]==0)
+    indices  [P, C]   int32   column ids; padding entries hold n_features
+    values   [P, C]   f32     stored values (explicit zeros are kept)
+
+where R = ``page_rows`` and C = the max per-page nnz rounded up to a lane
+multiple.  Fixing C across pages costs at most one lane of padding per
+page but buys the property the whole query engine is built on: every page
+block has the SAME shape, so the dense store's page<->batch determinism
+(batch k always covers the same pages, paper F3 / DESIGN.md Sec. 8) and
+the compiled-plan cache's one-signature-per-batching guarantee carry over
+to the sparse plane unchanged.
+
+Missing features are NOT stored.  The gather prepass re-materializes them
+as NaN, so the forest's ``default_left`` missing-value semantics are
+bit-identical to the dense plane's (NaN page padding included).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CSRPages",
+    "csr_from_dense",
+    "paginate_csr",
+    "densify_csr",
+    "csr_pages_from_dense",
+]
+
+#: padded capacity granularity — one f32 VPU lane
+LANE = 128
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CSRPages:
+    """Device-resident CSR page block (a whole dataset or a batch slice).
+
+    A registered pytree: jitted stage functions take it as an input like
+    any dense block, and a contiguous page range is a ``dynamic_slice``
+    along axis 0 of all three arrays (same page granularity as
+    ``StoredDataset.page_slice``).
+    """
+
+    indptr: jax.Array                 # [P, R+1] int32, page-local offsets
+    indices: jax.Array                # [P, C] int32, pad entries = n_features
+    values: jax.Array                 # [P, C] f32
+    n_features: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def num_pages(self) -> int:
+        return self.indptr.shape[0]
+
+    @property
+    def page_rows(self) -> int:
+        return self.indptr.shape[1] - 1
+
+    @property
+    def capacity(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def num_rows_padded(self) -> int:
+        return self.num_pages * self.page_rows
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.size * a.dtype.itemsize
+                   for a in (self.indptr, self.indices, self.values))
+
+    def page_slice(self, first_page: int, num_pages: int) -> "CSRPages":
+        """Contiguous page range (device view), same contract as the
+        dense store's page_slice: page p of batch k is always the same
+        rows AND the same block shape."""
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, first_page,
+                                                    num_pages, axis=0)
+        return dataclasses.replace(self, indptr=sl(self.indptr),
+                                   indices=sl(self.indices),
+                                   values=sl(self.values))
+
+
+# ---------------------------------------------------------------------------
+# host-side construction
+# ---------------------------------------------------------------------------
+
+
+def csr_from_dense(x: np.ndarray, *, drop_zeros: bool = False
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """[N, F] dense-with-NaN -> host CSR (indptr [N+1], indices, values).
+
+    NaN means missing (bosch semantics).  Explicit zeros are KEPT by
+    default so a CSR ingest of a dense dataset is lossless — LIBSVM files
+    drop zeros at *write* time (``loader.write_libsvm``), which is that
+    format's convention, not this store's.
+    """
+    present = ~np.isnan(x)
+    if drop_zeros:
+        present &= x != 0.0
+    counts = present.sum(axis=1)
+    indptr = np.zeros(x.shape[0] + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    rows, cols = np.nonzero(present)
+    return indptr, cols.astype(np.int32), x[rows, cols].astype(np.float32)
+
+
+def paginate_csr(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    values: np.ndarray,
+    *,
+    num_rows: int,
+    page_rows: int,
+    n_features: int,
+    pages_multiple: int = 1,
+    lane: int = LANE,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host CSR -> fixed-capacity page blocks (still host numpy).
+
+    Rows are padded to whole pages (empty rows — the sparse analogue of
+    the dense store's NaN padding rows: every feature missing) and the
+    page count to ``pages_multiple`` (mesh data-axis divisibility).
+    Capacity C = max page nnz rounded up to ``lane``; padding entries
+    carry column id ``n_features`` (one past the end), which the gather
+    prepass routes to a dump slot.
+    """
+    assert indptr.shape[0] == num_rows + 1
+    num_pages = -(-num_rows // page_rows)
+    num_pages += (-num_pages) % pages_multiple
+    num_pages = max(num_pages, pages_multiple)
+    padded_rows = num_pages * page_rows
+    # extend indptr over padding rows (they hold zero entries)
+    full_indptr = np.concatenate(
+        [indptr, np.full(padded_rows - num_rows, indptr[-1], indptr.dtype)])
+    starts = full_indptr[0:padded_rows + 1:page_rows]      # [P+1]
+    page_nnz = np.diff(starts)
+    cap = int(page_nnz.max(initial=0))
+    cap = max(lane, -(-cap // lane) * lane)
+
+    out_indptr = np.zeros((num_pages, page_rows + 1), np.int32)
+    out_indices = np.full((num_pages, cap), n_features, np.int32)
+    out_values = np.zeros((num_pages, cap), np.float32)
+    for p in range(num_pages):
+        lo, hi = int(starts[p]), int(starts[p + 1])
+        n = hi - lo
+        out_indptr[p] = (full_indptr[p * page_rows:(p + 1) * page_rows + 1]
+                         - lo).astype(np.int32)
+        out_indices[p, :n] = indices[lo:hi]
+        out_values[p, :n] = values[lo:hi]
+    return out_indptr, out_indices, out_values
+
+
+def csr_pages_from_dense(x: np.ndarray, *, page_rows: int,
+                         pages_multiple: int = 1, lane: int = LANE,
+                         drop_zeros: bool = False) -> CSRPages:
+    """Convenience: dense-with-NaN host array -> device CSRPages."""
+    n, f = x.shape
+    indptr, indices, values = csr_from_dense(x, drop_zeros=drop_zeros)
+    ip, ix, vl = paginate_csr(indptr, indices, values, num_rows=n,
+                              page_rows=page_rows, n_features=f,
+                              pages_multiple=pages_multiple, lane=lane)
+    return CSRPages(indptr=jnp.asarray(ip), indices=jnp.asarray(ix),
+                    values=jnp.asarray(vl), n_features=f)
+
+
+def densify_csr(pages_indptr: np.ndarray, pages_indices: np.ndarray,
+                pages_values: np.ndarray, n_features: int,
+                *, fill: float = np.nan) -> np.ndarray:
+    """Reference host densify of page blocks (tests/parity only — the
+    production path never builds [N, F]; that is the point)."""
+    P, Rp1 = pages_indptr.shape
+    R = Rp1 - 1
+    out = np.full((P * R, n_features), fill, np.float32)
+    for p in range(P):
+        for r in range(R):
+            lo, hi = int(pages_indptr[p, r]), int(pages_indptr[p, r + 1])
+            cols = pages_indices[p, lo:hi]
+            out[p * R + r, cols] = pages_values[p, lo:hi]
+    return out

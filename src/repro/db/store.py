@@ -13,6 +13,13 @@ the paper measures.
 Pages are the batching unit (paper F3): a batch is a contiguous page range,
 and the page↔step mapping is deterministic (page p of batch k is always the
 same rows), which is what makes failure replay exact (DESIGN.md Sec. 8).
+
+Storage formats: the catalog tags every dataset with a ``storage_format``.
+``dense`` is the original [N, F] layout; ``csr`` is the sparse data plane
+(``db/sparse.CSRPages``: fixed-capacity CSR page blocks, same page↔batch
+determinism, consumed through the feature-gather prepass instead of being
+densified at full F).  Query plans key their compiled-plan cache on the
+format, so a dense and a CSR plan over the same model never collide.
 """
 
 from __future__ import annotations
@@ -26,7 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["StoredDataset", "TensorBlockStore"]
+from repro.db.sparse import CSRPages, csr_from_dense, paginate_csr
+
+__all__ = ["StoredDataset", "SparseStoredDataset", "TensorBlockStore"]
 
 
 @dataclasses.dataclass
@@ -38,6 +47,7 @@ class StoredDataset:
     labels: jax.Array | None = None
     task: str = "classification"
     created_at: float = dataclasses.field(default_factory=time.time)
+    storage_format: str = "dense"
 
     @property
     def num_features(self) -> int:
@@ -60,6 +70,56 @@ class StoredDataset:
     def batches(self, pages_per_batch: int) -> Iterator[tuple[int, jax.Array]]:
         """Deterministic (batch_index, block) iteration — the F3 batching
         loop AND the replay unit: batch k always covers the same pages."""
+        for k, first in enumerate(range(0, self.num_pages, pages_per_batch)):
+            n = min(pages_per_batch, self.num_pages - first)
+            yield k, self.page_slice(first, n)
+
+
+@dataclasses.dataclass
+class SparseStoredDataset:
+    """A CSR-paged dataset: the sparse plane's analogue of StoredDataset.
+
+    Same page↔batch determinism (a batch is a contiguous page range and
+    every page block has one fixed shape), but rows live compressed —
+    pages beyond ``num_rows`` are EMPTY rows (every feature missing),
+    mirroring the dense store's NaN padding rows.
+    """
+
+    name: str
+    pages: CSRPages                # device-resident CSR page blocks
+    num_rows: int                  # true N (pre-padding)
+    labels: jax.Array | None = None
+    task: str = "classification"
+    created_at: float = dataclasses.field(default_factory=time.time)
+    storage_format: str = "csr"
+
+    @property
+    def num_features(self) -> int:
+        return self.pages.n_features
+
+    @property
+    def page_rows(self) -> int:
+        return self.pages.page_rows
+
+    @property
+    def num_pages(self) -> int:
+        return self.pages.num_pages
+
+    @property
+    def nbytes(self) -> int:
+        return self.pages.nbytes
+
+    @property
+    def nnz(self) -> int:
+        """True stored-entry count (excludes capacity padding)."""
+        return int(jnp.sum(self.pages.indptr[:, -1]))
+
+    def page_slice(self, first_page: int, num_pages: int) -> CSRPages:
+        return self.pages.page_slice(first_page, num_pages)
+
+    def batches(self, pages_per_batch: int) -> Iterator[tuple[int, CSRPages]]:
+        """Deterministic (batch_index, CSR block) iteration — identical
+        page→batch mapping to the dense plane's ``batches``."""
         for k, first in enumerate(range(0, self.num_pages, pages_per_batch)):
             n = min(pages_per_batch, self.num_pages - first)
             yield k, self.page_slice(first, n)
@@ -110,6 +170,74 @@ class TensorBlockStore:
         self._datasets[name] = ds
         return ds
 
+    def put_sparse(
+        self,
+        name: str,
+        data: np.ndarray | None = None,
+        *,
+        csr: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None,
+        num_rows: int | None = None,
+        num_features: int | None = None,
+        pages: CSRPages | None = None,
+        labels: np.ndarray | None = None,
+        page_rows: int | None = None,
+        task: str = "classification",
+        drop_zeros: bool = False,
+    ) -> SparseStoredDataset:
+        """Ingest a CSR dataset (the sparse data plane).
+
+        Three entry points, most-compressed first:
+          * ``pages`` — already-paginated device CSRPages (the LIBSVM→CSR
+            loader hands these over; zero extra host work, the in-database
+            boundary the paper measures against);
+          * ``csr`` — host (indptr [N+1], indices, values) triple;
+          * ``data`` — dense-with-NaN host rows (NaN = missing; explicit
+            zeros kept unless ``drop_zeros``), converted here.
+
+        Page padding mirrors ``put``: rows pad to whole pages as EMPTY
+        rows, and the page count pads to the mesh ``data`` axis.
+        """
+        page_rows = page_rows or self.default_page_rows
+        pages_multiple = 1
+        if self.mesh is not None and "data" in self.mesh.axis_names:
+            pages_multiple = int(self.mesh.shape["data"])
+
+        if pages is not None:
+            if num_rows is None:
+                raise ValueError("num_rows is required with pages=")
+        else:
+            if csr is None:
+                if data is None:
+                    raise ValueError("need one of data=, csr=, pages=")
+                arr = np.asarray(jax.device_get(data))
+                num_rows = arr.shape[0]
+                num_features = arr.shape[1]
+                csr = csr_from_dense(arr, drop_zeros=drop_zeros)
+            if num_rows is None or num_features is None:
+                raise ValueError("num_rows/num_features required with csr=")
+            indptr, indices, values = csr
+            ip, ix, vl = paginate_csr(indptr, indices, values,
+                                      num_rows=num_rows, page_rows=page_rows,
+                                      n_features=num_features,
+                                      pages_multiple=pages_multiple)
+            pages = CSRPages(indptr=jnp.asarray(ip), indices=jnp.asarray(ix),
+                             values=jnp.asarray(vl),
+                             n_features=int(num_features))
+        if self.mesh is not None and "data" in self.mesh.axis_names:
+            sharding = NamedSharding(self.mesh, P("data", None))
+            pages = dataclasses.replace(
+                pages,
+                indptr=jax.device_put(pages.indptr, sharding),
+                indices=jax.device_put(pages.indices, sharding),
+                values=jax.device_put(pages.values, sharding))
+        lab = None
+        if labels is not None:
+            lab = jnp.asarray(np.asarray(labels), jnp.float32)
+        ds = SparseStoredDataset(name=name, pages=pages, num_rows=int(num_rows),
+                                 labels=lab, task=task)
+        self._datasets[name] = ds
+        return ds
+
     def put_result(self, name: str, result: jax.Array, num_rows: int) -> StoredDataset:
         """The WRITE operator's sink: register an output dataset."""
         ds = StoredDataset(name=name, data=result[:, None] if result.ndim == 1
@@ -133,9 +261,13 @@ class TensorBlockStore:
         return name in self._datasets
 
     def catalog(self) -> dict[str, dict[str, Any]]:
-        return {
-            n: dict(rows=d.num_rows, features=d.num_features,
-                    pages=d.num_pages, page_rows=d.page_rows,
-                    bytes=d.nbytes, task=d.task)
-            for n, d in self._datasets.items()
-        }
+        out = {}
+        for n, d in self._datasets.items():
+            entry = dict(rows=d.num_rows, features=d.num_features,
+                         pages=d.num_pages, page_rows=d.page_rows,
+                         bytes=d.nbytes, task=d.task,
+                         format=getattr(d, "storage_format", "dense"))
+            if entry["format"] == "csr":
+                entry["nnz"] = d.nnz
+            out[n] = entry
+        return out

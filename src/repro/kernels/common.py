@@ -87,9 +87,13 @@ def block_heuristics(B, T, I, L, F, *, vmem_budget_bytes=12 * 1024 * 1024,
     (callers may pass the true count; I is a universal upper bound).
     NOTE this models the compiler fusing the iota-compare into operand
     streaming; ``dense_predicates`` as written still reshapes the dense
-    [BT*I, F] one-hot, so genuinely wide F on real hardware needs the
-    feature-gather prepass tracked in ROADMAP.md before these blocks are
-    guaranteed to fit.
+    [BT*I, F] one-hot, so genuinely wide F should come in PRE-GATHERED:
+    the sparse data plane (``core.forest.compact_forest`` +
+    ``kernels/gather.py``) remaps the forest onto its used-feature union
+    and hands the kernel a compact [BB, F_used] tile, making the modeled
+    ``F_eff`` the kernel's REAL operand width.  Callers can pass the true
+    per-tree count (``core.forest.used_feature_counts``) as
+    ``used_features``.
 
     ``max_block_t`` is the tree-tile cap: 8 suits the unfused kernels
     (their [BB, BT] output tile pays bandwidth per extra tree), while the

@@ -37,37 +37,46 @@ from repro.kernels.common import dense_predicates
 __all__ = ["hummingbird_kernel_call", "hummingbird_fused_kernel_call"]
 
 
-def _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, c_ref, d_ref):
-    """One (sample tile x tree tile) of raw per-tree scores [BB, BT]."""
+def _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, c_ref, d_ref,
+                 *, acc_dtype=jnp.float32):
+    """One (sample tile x tree tile) of raw per-tree scores [BB, BT].
+
+    Tree tiles (thresholds/leaves) may be staged bf16; compute accumulates
+    at ``acc_dtype`` (f32) — leaves upcast on load, C/D stay f32 (they are
+    structure-only, shared across trees, and the P == D leaf match needs
+    exact small-integer counts).
+    """
     x = x_ref[...]                        # [BB, F]
     feat = feat_ref[...]                  # [BT, I]
     thr = thr_ref[...]
     dl = dl_ref[...] != 0
-    leaves = leaf_ref[...]                # [BT, L]
+    leaves = leaf_ref[...].astype(acc_dtype)   # [BT, L] upcast on load
     C = c_ref[...]                        # [I, L] shared structure matrix
     D = d_ref[...]                        # [1, L] left-turn counts per leaf
     BB = x.shape[0]
     BT, I = feat.shape
     L = C.shape[1]
 
-    s = dense_predicates(x, feat, thr, dl).astype(jnp.float32)   # [BB, BT, I]
+    s = dense_predicates(x, feat, thr, dl,
+                         acc_dtype=acc_dtype).astype(acc_dtype)  # [BB, BT, I]
     # stage 2: path GEMM against the shared C — one [BB*BT, I] @ [I, L]
     P = jnp.dot(s.reshape(BB * BT, I), C,
-                preferred_element_type=jnp.float32)              # [BB*BT, L]
+                preferred_element_type=acc_dtype)                # [BB*BT, L]
     # stage 3: exit-leaf one-hot (P == D) and leaf-value contraction
-    onehot = (P == D).astype(jnp.float32).reshape(BB, BT, L)
+    onehot = (P == D).astype(acc_dtype).reshape(BB, BT, L)
     return jnp.sum(onehot * leaves[None], axis=2)
 
 
-def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, c_ref, d_ref, out_ref):
+def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, c_ref, d_ref, out_ref,
+            *, acc_dtype=jnp.float32):
     out_ref[...] = _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref,
-                                c_ref, d_ref)
+                                c_ref, d_ref, acc_dtype=acc_dtype)
 
 
 def _fused_kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, c_ref, d_ref,
-                  out_ref):
+                  out_ref, *, acc_dtype=jnp.float32):
     scores = _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref,
-                          c_ref, d_ref)
+                          c_ref, d_ref, acc_dtype=acc_dtype)
 
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -89,7 +98,8 @@ def _in_specs(F, I, L, W_unused, block_b, block_t):
 
 
 def hummingbird_kernel_call(x, feature, threshold, default_left, leaf_value,
-                            C, D, *, block_b, block_t, interpret=False):
+                            C, D, *, block_b, block_t, interpret=False,
+                            acc_dtype=jnp.float32):
     """Raw pallas_call; shapes must already be padded to block multiples.
 
     C [I, L] f32 and D [1, L] f32 are the structure-only tensors from
@@ -101,33 +111,36 @@ def hummingbird_kernel_call(x, feature, threshold, default_left, leaf_value,
     assert B % block_b == 0 and T % block_t == 0
     grid = (B // block_b, T // block_t)
 
+    kernel = functools.partial(_kernel, acc_dtype=acc_dtype)
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
         in_specs=_in_specs(F, I, L, None, block_b, block_t),
         out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, T), acc_dtype),
         interpret=interpret,
     )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value, C, D)
 
 
 def hummingbird_fused_kernel_call(x, feature, threshold, default_left,
                                   leaf_value, C, D, *, block_b, block_t,
-                                  interpret=False):
+                                  interpret=False, acc_dtype=jnp.float32):
     """Fused GEMM traversal + SUM aggregation: returns [B, 1] sums.
 
-    Padding trees carry zero leaves, so they contribute exactly 0.0."""
+    Padding trees carry zero leaves, so they contribute exactly 0.0.
+    bf16 tree tiles upcast in-kernel; sums accumulate at ``acc_dtype``."""
     B, F = x.shape
     T, I = feature.shape
     L = leaf_value.shape[1]
     assert B % block_b == 0 and T % block_t == 0
     grid = (B // block_b, T // block_t)
 
+    kernel = functools.partial(_fused_kernel, acc_dtype=acc_dtype)
     return pl.pallas_call(
-        _fused_kernel,
+        kernel,
         grid=grid,
         in_specs=_in_specs(F, I, L, None, block_b, block_t),
         out_specs=pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, 1), acc_dtype),
         interpret=interpret,
     )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value, C, D)

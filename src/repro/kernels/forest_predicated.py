@@ -37,18 +37,24 @@ from repro.kernels.common import dense_predicates, onehot_select
 __all__ = ["predicated_kernel_call", "predicated_fused_kernel_call"]
 
 
-def _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, *, depth):
-    """One (sample tile x tree tile) of raw per-tree scores [BB, BT]."""
+def _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, *, depth,
+                 acc_dtype=jnp.float32):
+    """One (sample tile x tree tile) of raw per-tree scores [BB, BT].
+
+    Tree tiles (thresholds/leaves) may be staged at a narrower dtype
+    (bf16 halves their VMEM footprint and HBM bandwidth); all compute
+    accumulates at ``acc_dtype`` (f32) — values upcast on load here.
+    """
     x = x_ref[...]                       # [BB, F]
     feat = feat_ref[...]                 # [BT, I]
     thr = thr_ref[...]
     dl = dl_ref[...] != 0                # int8 -> bool
-    leaves = leaf_ref[...]               # [BT, L]
+    leaves = leaf_ref[...].astype(acc_dtype)   # [BT, L] upcast on load
     BB = x.shape[0]
     BT, I = feat.shape
 
-    s = dense_predicates(x, feat, thr, dl)          # [BB, BT, I] bool
-    s_val = s.astype(jnp.float32)
+    s = dense_predicates(x, feat, thr, dl, acc_dtype=acc_dtype)
+    s_val = s.astype(acc_dtype)                     # [BB, BT, I]
 
     idx = jnp.zeros((BB, BT), jnp.int32)
     for _ in range(depth):                          # unrolled descent
@@ -62,15 +68,16 @@ def _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, *, depth):
     return onehot_select(leaves, leaf)
 
 
-def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, out_ref, *, depth):
+def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, out_ref, *, depth,
+            acc_dtype=jnp.float32):
     out_ref[...] = _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref,
-                                depth=depth)
+                                depth=depth, acc_dtype=acc_dtype)
 
 
 def _fused_kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, out_ref,
-                  *, depth):
+                  *, depth, acc_dtype=jnp.float32):
     scores = _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref,
-                          depth=depth)
+                          depth=depth, acc_dtype=acc_dtype)
 
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -90,7 +97,8 @@ def _forest_in_specs(F, I, L, block_b, block_t):
 
 
 def predicated_kernel_call(x, feature, threshold, default_left, leaf_value,
-                           *, depth, block_b, block_t, interpret=False):
+                           *, depth, block_b, block_t, interpret=False,
+                           acc_dtype=jnp.float32):
     """Raw pallas_call; shapes must already be padded to block multiples."""
     B, F = x.shape
     T, I = feature.shape
@@ -98,26 +106,31 @@ def predicated_kernel_call(x, feature, threshold, default_left, leaf_value,
     assert B % block_b == 0 and T % block_t == 0
     grid = (B // block_b, T // block_t)
 
-    kernel = functools.partial(_kernel, depth=depth)
+    kernel = functools.partial(_kernel, depth=depth, acc_dtype=acc_dtype)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=_forest_in_specs(F, I, L, block_b, block_t),
         out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, T), acc_dtype),
         interpret=interpret,
     )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value)
 
 
 def predicated_fused_kernel_call(x, feature, threshold, default_left,
                                  leaf_value, *, depth, block_b, block_t,
-                                 interpret=False):
+                                 interpret=False, acc_dtype=jnp.float32):
     """Fused traversal + SUM aggregation: returns [B, 1] per-sample sums.
 
     The tree grid axis is the accumulation axis: its output block index map
     is constant in j, so the same [BB, 1] block is revisited for every tree
     tile and accumulated in place (init at j == 0).  Padding trees carry
     zero leaves, so they add exactly 0.0 to the sum.
+
+    Tree tiles (threshold/leaf_value) may arrive bf16 (InTreeger-style
+    shrink: half the tree-tile VMEM + HBM bandwidth); accumulation stays
+    at ``acc_dtype`` (f32) — the output block and every partial sum hold
+    full precision.
     """
     B, F = x.shape
     T, I = feature.shape
@@ -125,12 +138,13 @@ def predicated_fused_kernel_call(x, feature, threshold, default_left,
     assert B % block_b == 0 and T % block_t == 0
     grid = (B // block_b, T // block_t)
 
-    kernel = functools.partial(_fused_kernel, depth=depth)
+    kernel = functools.partial(_fused_kernel, depth=depth,
+                               acc_dtype=acc_dtype)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=_forest_in_specs(F, I, L, block_b, block_t),
         out_specs=pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, 1), acc_dtype),
         interpret=interpret,
     )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value)

@@ -44,20 +44,26 @@ def _and_reduce(masks):
 
 
 def _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, bv_ref,
-                 *, num_words):
-    """One (sample tile x tree tile) of raw per-tree scores [BB, BT]."""
+                 *, num_words, acc_dtype=jnp.float32):
+    """One (sample tile x tree tile) of raw per-tree scores [BB, BT].
+
+    Tree tiles (thresholds/leaves) may be staged bf16; the bit-vector
+    machinery is uint32 regardless, and the leaf contraction accumulates
+    at ``acc_dtype`` (f32) after an on-load upcast.
+    """
     x = x_ref[...]                        # [BB, F]
     feat = feat_ref[...]                  # [BT, I]
     thr = thr_ref[...]
     dl = dl_ref[...] != 0
-    leaves = leaf_ref[...]                # [BT, L]
+    leaves = leaf_ref[...].astype(acc_dtype)   # [BT, L] upcast on load
     bv = bv_ref[...]                      # [I, W] uint32 (structure-only)
     BB = x.shape[0]
     BT, I = feat.shape
     L = leaves.shape[1]
     W = num_words
 
-    s_false = ~dense_predicates(x, feat, thr, dl)        # [BB, BT, I]
+    s_false = ~dense_predicates(x, feat, thr, dl,
+                                acc_dtype=acc_dtype)     # [BB, BT, I]
 
     # pad the node axis to a power of two with identity masks
     n = 1
@@ -88,15 +94,16 @@ def _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, bv_ref,
 
 
 def _kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, bv_ref, out_ref,
-            *, num_words):
+            *, num_words, acc_dtype=jnp.float32):
     out_ref[...] = _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref,
-                                bv_ref, num_words=num_words)
+                                bv_ref, num_words=num_words,
+                                acc_dtype=acc_dtype)
 
 
 def _fused_kernel(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref, bv_ref,
-                  out_ref, *, num_words):
+                  out_ref, *, num_words, acc_dtype=jnp.float32):
     scores = _tile_scores(x_ref, feat_ref, thr_ref, dl_ref, leaf_ref,
-                          bv_ref, num_words=num_words)
+                          bv_ref, num_words=num_words, acc_dtype=acc_dtype)
 
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -117,7 +124,8 @@ def _in_specs(F, I, L, W, block_b, block_t):
 
 
 def quickscorer_kernel_call(x, feature, threshold, default_left, leaf_value,
-                            bitvectors, *, block_b, block_t, interpret=False):
+                            bitvectors, *, block_b, block_t, interpret=False,
+                            acc_dtype=jnp.float32):
     """Raw pallas_call; shapes must already be padded to block multiples.
 
     bitvectors [I, W] uint32 from ``core.forest.qs_bitvectors``.
@@ -130,13 +138,13 @@ def quickscorer_kernel_call(x, feature, threshold, default_left, leaf_value,
     assert W * 32 >= L, f"bit width {W*32} < leaves {L}"
     grid = (B // block_b, T // block_t)
 
-    kernel = functools.partial(_kernel, num_words=W)
+    kernel = functools.partial(_kernel, num_words=W, acc_dtype=acc_dtype)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=_in_specs(F, I, L, W, block_b, block_t),
         out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, T), acc_dtype),
         interpret=interpret,
     )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value,
       bitvectors)
@@ -144,11 +152,13 @@ def quickscorer_kernel_call(x, feature, threshold, default_left, leaf_value,
 
 def quickscorer_fused_kernel_call(x, feature, threshold, default_left,
                                   leaf_value, bitvectors, *, block_b,
-                                  block_t, interpret=False):
+                                  block_t, interpret=False,
+                                  acc_dtype=jnp.float32):
     """Fused bit-vector traversal + SUM aggregation: returns [B, 1] sums.
 
     The tree grid axis revisits one [BB, 1] output block per sample tile
-    (init at j == 0); padding trees carry zero leaves so they add 0.0."""
+    (init at j == 0); padding trees carry zero leaves so they add 0.0.
+    bf16 tree tiles upcast in-kernel; sums accumulate at ``acc_dtype``."""
     B, F = x.shape
     T, I = feature.shape
     L = leaf_value.shape[1]
@@ -157,13 +167,14 @@ def quickscorer_fused_kernel_call(x, feature, threshold, default_left,
     assert W * 32 >= L, f"bit width {W*32} < leaves {L}"
     grid = (B // block_b, T // block_t)
 
-    kernel = functools.partial(_fused_kernel, num_words=W)
+    kernel = functools.partial(_fused_kernel, num_words=W,
+                               acc_dtype=acc_dtype)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=_in_specs(F, I, L, W, block_b, block_t),
         out_specs=pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, 1), acc_dtype),
         interpret=interpret,
     )(x, feature, threshold, default_left.astype(jnp.int8), leaf_value,
       bitvectors)

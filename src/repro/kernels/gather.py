@@ -1,0 +1,85 @@
+"""Feature-gather prepass: CSR pages -> dense compact sample tiles.
+
+The missing link between the sparse data plane (``db/sparse.CSRPages``)
+and the dense-tile Pallas kernels: instead of densifying a wide-sparse
+row to full ``[B, F]`` (criteo: F = 10k+, 96% missing) and letting the
+predicate one-hot explode to ``[BT, I, F]``, we scatter each CSR row into
+the forest's COMPACT feature space ``[B, F_used]`` (``core.forest.
+compact_forest``: F_used = the used-feature union, typically <= trees x
+(2^depth - 1) and in practice a few hundred).  The existing fused
+predicated/hummingbird/quickscorer kernels then run unchanged on the
+compact tile with the remapped forest — the ``[BT, I, F]`` compare never
+exists at full F, which is the acceptance check this subsystem is built
+around.
+
+The prepass is regular XLA (one scatter per page block), not a Pallas
+kernel: data-dependent scatters are what the TPU kernels are designed to
+avoid, and the scatter's output is exactly the dense tile the kernels
+stream from VMEM anyway — so the prepass composes into the same jitted
+stage as the kernel call and its cost is O(nnz), independent of F.
+
+Missing-value contract: absent features become ``fill`` (NaN by default),
+so ``default_left`` routing is identical to the dense plane's; page
+padding rows come out all-NaN, mirroring the dense store's NaN pad rows.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.db.sparse import CSRPages
+
+__all__ = ["gather_inverse_map", "csr_block_to_dense", "gather_columns"]
+
+
+def gather_inverse_map(gather_idx: np.ndarray, n_features: int) -> np.ndarray:
+    """[n_features + 1] int32: original column -> compact slot.
+
+    Slot ``len(gather_idx)`` is the DUMP slot: unused features and the
+    CSR capacity-padding sentinel (column id == n_features) land there
+    and are sliced away.  Padding duplicates in ``gather_idx`` (slots
+    repeating gather_idx[0]) must NOT shadow the real slot, so the first
+    occurrence wins — the remapped forest reads the first slot only.
+    """
+    gather_idx = np.asarray(gather_idx, np.int64)
+    f_used = int(gather_idx.size)
+    inv = np.full(n_features + 1, f_used, np.int32)
+    # reversed so the FIRST occurrence of a duplicated column wins
+    inv[gather_idx[::-1]] = np.arange(f_used - 1, -1, -1, dtype=np.int32)
+    return inv
+
+
+def csr_block_to_dense(block: CSRPages, inv_map: jax.Array, f_used: int,
+                       *, fill: float = np.nan) -> jax.Array:
+    """CSR page block -> dense COMPACT tile [P * page_rows, f_used].
+
+    ``inv_map`` is ``gather_inverse_map`` as a device array ([F+1] int32);
+    ``f_used`` must equal ``inv_map``'s dump slot (= gather table size).
+    Each stored entry (row r, column c, value v) scatters to
+    ``out[r, inv_map[c]]``; dump-slot traffic (unused features, capacity
+    padding) goes to a phantom column that is sliced off.  Rows keep
+    ``fill`` everywhere no entry lands — missing stays missing.
+    """
+    R = block.page_rows
+    C = block.capacity
+    entry = jnp.arange(C, dtype=jnp.int32)
+
+    def one(ip, ix, vl):
+        # row of each entry: #(page-local row starts <= entry position);
+        # capacity-padding entries (>= page nnz) fall off to phantom row R
+        row = jnp.searchsorted(ip[1:], entry, side="right").astype(jnp.int32)
+        col = inv_map[jnp.clip(ix, 0, inv_map.shape[0] - 1)]
+        out = jnp.full((R + 1, f_used + 1), fill, vl.dtype)
+        out = out.at[row, col].set(vl, mode="drop")
+        return out[:R, :f_used]
+
+    tiles = jax.vmap(one)(block.indptr, block.indices, block.values)
+    return tiles.reshape(block.num_pages * R, f_used)
+
+
+def gather_columns(x: jax.Array, gather_idx) -> jax.Array:
+    """Dense-plane column gather: [B, F] -> [B, F_used] via the same
+    index table (the cheap path when wide data is already dense)."""
+    return jnp.take(x, jnp.asarray(gather_idx), axis=1)

@@ -118,8 +118,14 @@ def _blocks(forest: Forest, B, block_b, block_t, *, fused=False):
 
 
 def _prepared(forest: Forest, x: jax.Array, block_b, block_t, interpret,
-              *, fused=False):
-    """Shared padding + block selection for both backend families."""
+              *, fused=False, tree_dtype=None):
+    """Shared padding + block selection for both backend families.
+
+    ``tree_dtype`` (e.g. bf16) narrows the per-tree tiles — thresholds and
+    leaves — AFTER padding (inf/0 fills survive the cast exactly); the
+    kernels upcast on load and accumulate in f32 (InTreeger-style tree
+    shrink: half the tree-tile VMEM footprint and HBM bandwidth).
+    """
     if interpret is None:
         interpret = not _on_tpu()
     B = x.shape[0]
@@ -128,6 +134,9 @@ def _prepared(forest: Forest, x: jax.Array, block_b, block_t, interpret,
     fe, th, dl, lv = _pad_forest_arrays(
         forest.feature, forest.threshold, forest.default_left,
         forest.leaf_value, block_t)
+    if tree_dtype is not None:
+        th = th.astype(tree_dtype)
+        lv = lv.astype(tree_dtype)
     return xp, fe, th, dl, lv, block_b, block_t, interpret
 
 
@@ -158,26 +167,35 @@ def _run(kind: str, forest: Forest, x: jax.Array, *, block_b=None,
 
 
 def _run_fused(kind: str, forest: Forest, x: jax.Array, *, block_b=None,
-               block_t=None, interpret=None) -> jax.Array:
-    """Fused predict + SUM: [B] raw-margin sums, no [B, T] materialization."""
+               block_t=None, interpret=None, tree_dtype=None,
+               acc_dtype=jnp.float32) -> jax.Array:
+    """Fused predict + SUM: [B] raw-margin sums, no [B, T] materialization.
+
+    ``tree_dtype=jnp.bfloat16`` stages the tree tiles (thresholds/leaves)
+    at half width; accumulation stays ``acc_dtype`` (f32).
+    """
     B = x.shape[0]
     xp, fe, th, dl, lv, block_b, block_t, interpret = _prepared(
-        forest, x, block_b, block_t, interpret, fused=True)
+        forest, x, block_b, block_t, interpret, fused=True,
+        tree_dtype=tree_dtype)
 
     if kind == "predicated":
         summed = predicated_fused_kernel_call(
             xp, fe, th, dl, lv, depth=forest.depth,
-            block_b=block_b, block_t=block_t, interpret=interpret)
+            block_b=block_b, block_t=block_t, interpret=interpret,
+            acc_dtype=acc_dtype)
     elif kind == "hummingbird":
         C, D = _hb_tensors(forest.depth)
         summed = hummingbird_fused_kernel_call(
             xp, fe, th, dl, lv, C, D,
-            block_b=block_b, block_t=block_t, interpret=interpret)
+            block_b=block_b, block_t=block_t, interpret=interpret,
+            acc_dtype=acc_dtype)
     elif kind == "quickscorer":
         bv = _qs_tensors(forest.depth)
         summed = quickscorer_fused_kernel_call(
             xp, fe, th, dl, lv, bv,
-            block_b=block_b, block_t=block_t, interpret=interpret)
+            block_b=block_b, block_t=block_t, interpret=interpret,
+            acc_dtype=acc_dtype)
     else:
         raise ValueError(f"unknown kernel {kind!r}")
     # padding trees sum to 0.0, so only the sample axis needs un-padding

@@ -152,6 +152,31 @@ def test_plan_cache_not_stale_after_model_eviction(setup):
                                np.asarray(r1.predictions))
 
 
+def test_engine_invalidate_sweeps_both_caches(setup):
+    """Regression: plan keys lead with a kind tag ('udf-plan'/'rel-plan'),
+    so ModelReuseCache.invalidate's key[0] == model_id match silently
+    misses every compiled plan.  The engine-level invalidate must sweep
+    BOTH the partition cache and the plan cache."""
+    store, forest, _ = setup
+    engine = ForestQueryEngine(store, reuse_cache=ModelReuseCache(),
+                               plan_cache=ModelReuseCache())
+    engine.infer("test", forest, plan="udf", model_id="mX")
+    engine.infer("test", forest, plan="rel+reuse", model_id="mX")
+    assert len(engine.cache) == 1 and len(engine.plan_cache) == 2
+    # the raw cache-level sweep is exactly the silent miss being fixed
+    assert engine.plan_cache.invalidate("mX") == 0
+    n = engine.invalidate("mX")
+    assert n == 3
+    assert len(engine.cache) == 0 and len(engine.plan_cache) == 0
+    # next queries rebuild from scratch: no stale hit either way
+    r = engine.infer("test", forest, plan="rel+reuse", model_id="mX")
+    assert not r.reuse_hit and not r.plan_reuse_hit
+    # other models' entries survive a targeted sweep
+    engine.infer("test", forest, plan="udf", model_id="mY")
+    engine.invalidate("mX")
+    assert len(engine.plan_cache) == 1
+
+
 def test_reuse_cache_is_lru_not_fifo():
     """A hit must refresh recency: with capacity 2, touching A before
     inserting C must evict B (FIFO would evict the hot A)."""
