@@ -92,7 +92,6 @@ def run_fused(dataset="higgs", trees=FUSED_TREE_GRID, batch=512, iters=3):
 
     x, _ = C.bench_data(dataset, scale=1.0)
     x = jnp.asarray(x[:batch])
-    backend = jax.default_backend()
     rows, records = [], []
     for T in trees:
         forest = C.get_forest(dataset, "xgboost", T)
@@ -104,16 +103,9 @@ def run_fused(dataset="higgs", trees=FUSED_TREE_GRID, batch=512, iters=3):
             fused_bf16 = jax.jit(
                 lambda xx, f=ffn: f(forest, xx, tree_dtype=jnp.bfloat16))
 
-            def best(fn):
-                jax.block_until_ready(fn(x))        # compile + warm
-                times = []
-                for _ in range(iters):
-                    t0 = time.perf_counter()
-                    jax.block_until_ready(fn(x))
-                    times.append(time.perf_counter() - t0)
-                return min(times)
-
-            t_un, t_fu, t_bf = best(unfused), best(fused), best(fused_bf16)
+            t_un = C.time_best(unfused, x, iters=iters)
+            t_fu = C.time_best(fused, x, iters=iters)
+            t_bf = C.time_best(fused_bf16, x, iters=iters)
             for plat, dt, fn in ((f"pallas-{name}+agg", t_un, unfused),
                                  (f"pallas-{fname}", t_fu, fused),
                                  (f"pallas-{fname}-bf16", t_bf, fused_bf16)):
@@ -123,19 +115,81 @@ def run_fused(dataset="higgs", trees=FUSED_TREE_GRID, batch=512, iters=3):
                                  total_s=round(dt, 5),
                                  checksum=float(jnp.sum(fn(x)))))
             records.append(dict(trees=T, algorithm=name, batch=batch,
-                                backend=backend,
                                 unfused_s=round(t_un, 5),
                                 fused_s=round(t_fu, 5),
                                 bf16_s=round(t_bf, 5),
                                 speedup=round(t_un / max(t_fu, 1e-9), 3),
                                 bf16_speedup=round(t_un / max(t_bf, 1e-9),
-                                                   3)))
+                                                   3),
+                                **C.env_info()))
+    return rows, records
+
+
+def run_fused_mesh(dataset="higgs", trees=(500,), batch=256, iters=3,
+                   algorithm="predicated"):
+    """Mesh-size trajectory rows for BENCH_fused.json.
+
+    Measures the rel plan's kernel stage in isolation: the single-device
+    fused call (all trees, one launch) vs the shard_map form — the tree
+    axis sharded over the mesh ``model`` axis, ONE local fused launch per
+    device, one psum.  With a single host device the mesh row degenerates
+    to the single-device call (recorded with mesh_devices=1), so the
+    trajectory file always carries a mesh-size row; the CI multi-device
+    smoke and TPU runs fill in the >1 points.  Off-TPU both paths run the
+    interpret-mode kernel, so treat multi-device CPU numbers as overhead
+    records, not speedup claims.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.core.forest import pad_trees
+    from repro.kernels.ops import FUSED_KERNEL_ALGORITHMS
+
+    fn = FUSED_KERNEL_ALGORITHMS[algorithm + "_pallas_fused"]
+    devs = jax.devices()
+    D = len(devs)
+    mesh = (Mesh(np.array(devs).reshape(1, D), ("data", "model"))
+            if D > 1 else None)
+    x, _ = C.bench_data(dataset, scale=1.0)
+    x = jnp.asarray(x[:batch])
+    rows, records = [], []
+
+    for T in trees:
+        forest = C.get_forest(dataset, "xgboost", T)
+        single = jax.jit(lambda xx: fn(forest, xx))
+        t_single = C.time_best(single, x, iters=iters)
+        if mesh is not None:
+            fp, _ = pad_trees(forest, D)
+            shardings = jax.tree_util.tree_map(
+                lambda _: NamedSharding(mesh, P("model")), fp)
+            fp = jax.device_put(fp, shardings)
+
+            def body(xl, fl):
+                return jax.lax.psum(fn(fl, xl), "model")
+
+            sm = jax.jit(shard_map(
+                body, mesh=mesh, in_specs=(P("data", None), P("model")),
+                out_specs=P("data"), check_rep=False))
+            t_mesh = C.time_best(sm, x, fp, iters=iters)
+        else:
+            t_mesh = t_single
+        rows.append(dict(dataset=dataset, model="xgboost", trees=T,
+                         platform=f"pallas-{algorithm}_fused@mesh{D}",
+                         load_s=0.0, infer_s=round(t_mesh, 5), write_s=0.0,
+                         total_s=round(t_mesh, 5), checksum=0.0))
+        records.append(dict(kind="mesh", trees=T, algorithm=algorithm,
+                            batch=batch,
+                            single_device_s=round(t_single, 5),
+                            mesh_s=round(t_mesh, 5),
+                            mesh_speedup=round(t_single / max(t_mesh, 1e-9),
+                                               3),
+                            **C.env_info(mesh)))
     return rows, records
 
 
 def write_fused_json(records, path=BENCH_FUSED_JSON):
     payload = {"bench": "fused_vs_unfused", "created_at": time.time(),
-               "records": records}
+               "env": C.env_info(), "records": records}
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=2)
     return path
@@ -162,10 +216,16 @@ def main():
             batch=256 if args.fast else 512,
             iters=3 if args.fast else 5)
         C.print_rows(rows)
-        path = write_fused_json(records, args.fused_out)
+        mrows, mrecords = run_fused_mesh(
+            trees=(trees[-1],) if args.fast else (FUSED_TREE_GRID[0],),
+            batch=128 if args.fast else 256,
+            iters=2 if args.fast else 3)
+        C.print_rows(mrows, header=False)
+        path = write_fused_json(records + mrecords, args.fused_out)
         ok = all(r["speedup"] > 1.0 for r in records)
+        ndev = mrecords[-1]["mesh_devices"] if mrecords else 1
         print(f"# fused trajectory -> {path}  "
-              f"(all fused faster: {ok})")
+              f"(all fused faster: {ok}; mesh rows at {ndev} device(s))")
 
 
 if __name__ == "__main__":

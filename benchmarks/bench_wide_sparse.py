@@ -139,13 +139,14 @@ def run_sparse(datasets=("bosch", "criteo"), trees=C.FAST_TREE_GRID,
                 dense_total_s=round(res_d.total_s, 5),
                 csr_total_s=round(res_s.total_s, 5),
                 csr_vs_dense=round(res_d.total_s
-                                   / max(res_s.total_s, 1e-9), 3)))
+                                   / max(res_s.total_s, 1e-9), 3),
+                **C.env_info(engine.mesh)))
     return rows, records
 
 
 def write_sparse_json(records, path=BENCH_SPARSE_JSON):
     payload = {"bench": "csr_vs_dense", "created_at": time.time(),
-               "records": records}
+               "env": C.env_info(), "records": records}
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=2)
     return path

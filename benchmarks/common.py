@@ -39,6 +39,27 @@ from repro.db.store import TensorBlockStore
 
 CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench_cache")
 
+
+def env_info(mesh=None) -> dict:
+    """Execution-environment fields stamped on every BENCH_*.json record,
+    so single- and multi-device trajectory rows never get conflated.
+
+    ``mesh`` is the Mesh the measured path actually ran under (None =
+    single device): ``mesh_devices`` is the device count it spanned,
+    ``mesh`` its axis signature, ``host_devices`` what the process had
+    available (e.g. 8 under XLA_FLAGS=--xla_force_host_platform_
+    device_count=8).
+    """
+    sig = None
+    if mesh is not None:
+        sig = "x".join(f"{a}={int(mesh.shape[a])}" for a in mesh.axis_names)
+    return {
+        "backend": jax.default_backend(),
+        "host_devices": len(jax.devices()),
+        "mesh_devices": int(mesh.size) if mesh is not None else 1,
+        "mesh": sig,
+    }
+
 # CPU-scale replicas of the paper's datasets (rows after test-split)
 BENCH_ROWS = {
     "fraud": 12_000, "year": 16_000, "higgs": 40_000, "airline": 80_000,
@@ -46,6 +67,18 @@ BENCH_ROWS = {
 }
 TREE_GRID = (10, 500, 1600)
 FAST_TREE_GRID = (10, 100)
+
+
+def time_best(fn, *args, iters: int = 3) -> float:
+    """Warm (compile) once, then min-of-``iters`` wall time — the shared
+    timing protocol for the kernel-level trajectory benches."""
+    jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return min(times)
 
 
 def get_forest(dataset: str, model_type: str, n_trees: int,

@@ -95,11 +95,22 @@ def main() -> None:
         trees=(trees[-1],) if args.fast else bench_algorithms.FUSED_TREE_GRID,
         batch=256 if args.fast else 512, iters=3 if args.fast else 5)
     C.print_rows(rows)
-    fused_path = bench_algorithms.write_fused_json(fused_records)
+    print("\n## Mesh-size rows: shard_map tree-parallel fused kernel stage")
+    mrows, mesh_records = bench_algorithms.run_fused_mesh(
+        trees=(trees[-1],) if args.fast
+        else (bench_algorithms.FUSED_TREE_GRID[0],),
+        batch=128 if args.fast else 256, iters=2 if args.fast else 3)
+    C.print_rows(mrows)
+    fused_path = bench_algorithms.write_fused_json(
+        fused_records + mesh_records)
     for r in fused_records:
         summary.append(C.csv_line(
             f"fused/{r['algorithm']}/trees{r['trees']}", r["fused_s"],
             f"speedup={r['speedup']}x bf16_speedup={r['bf16_speedup']}x"))
+    for r in mesh_records:
+        summary.append(C.csv_line(
+            f"fused-mesh/{r['algorithm']}/trees{r['trees']}", r["mesh_s"],
+            f"devices={r['mesh_devices']} mesh={r['mesh']}"))
     print(f"# fused trajectory -> {fused_path}")
 
     from benchmarks import bench_conversion

@@ -24,7 +24,8 @@ from typing import Any, Callable, Sequence
 
 import jax
 
-__all__ = ["Operator", "Stage", "StageReport", "run_stages", "TRACE_STATS"]
+__all__ = ["Operator", "Stage", "StageReport", "ndevices", "run_stages",
+           "TRACE_STATS"]
 
 # Tracing telemetry: a stage's fused body runs as Python only while jax.jit
 # TRACES it (cache hits go straight to the compiled executable), so this
@@ -53,12 +54,26 @@ class StageReport:
     operators: tuple[str, ...]
     seconds: float
     materialized_bytes: int
+    devices: int = 1                 # devices the stage output spans (a
+    #                                  shard_map'd stage materializes its
+    #                                  boundary on every mesh device)
 
 
 def _nbytes(tree) -> int:
     return sum(x.size * x.dtype.itemsize
                for x in jax.tree_util.tree_leaves(tree)
                if hasattr(x, "dtype"))
+
+
+def ndevices(tree) -> int:
+    """Device span of a stage's materialized output (1 off-mesh)."""
+    n = 1
+    for x in jax.tree_util.tree_leaves(tree):
+        sharding = getattr(x, "sharding", None)
+        device_set = getattr(sharding, "device_set", None)
+        if device_set:
+            n = max(n, len(device_set))
+    return n
 
 
 @dataclasses.dataclass
@@ -87,6 +102,7 @@ class Stage:
             operators=tuple(op.name for op in self.operators),
             seconds=dt,
             materialized_bytes=_nbytes(out),
+            devices=ndevices(out),
         )
         return out, report
 

@@ -39,10 +39,26 @@ full F, so criteo-scale feature counts execute instead of being modeled.
 Dense and CSR plans over the same model are distinct cache entries (the
 storage format is part of both cache keys).
 
+Multi-device fused inference: on a mesh (``dist.sharding.make_forest_plan``
+axis mapping: ``data`` shards sample blocks / CSR pages, ``model`` shards
+tree blocks) the kernel stages run under ``jax.experimental.shard_map``.
+The udf plan's body is the fused kernel over the LOCAL sample shard with a
+replicated forest; the rel plan's cross-product + partial-aggregate
+collapse into ONE local fused kernel launch per device followed by a
+single ``psum`` over ``model`` — the ``[n_parts, B]`` partials never cross
+a stage boundary (they exist only as the per-device ``[B_local]`` sums
+inside the manual region).  The CSR feature-gather prepass also moves
+INSIDE the body, so compact tiles only ever exist at the local batch.
+Without a mesh (or without the relevant axis) the single-device template
+keeps the same stage structure: the rel cross-product is an unrolled loop
+over tree partitions (``n_parts`` derived from the kernel tree-block
+heuristic, overridable per query), and the aggregate stage folds the
+partials sequentially in partition order — the same association XLA:CPU's
+all-reduce uses, which is what makes mesh and mesh-less fused predictions
+bit-identical in f32.
+
 Each stage is timed and its materialized bytes recorded, reproducing the
-paper's latency breakdowns.  On a mesh the plans run under ``shard_map`` so
-data/model parallelism is explicit; without a mesh a single-device path keeps
-the same stage structure (model "partitions" become tree chunks).
+paper's latency breakdowns.
 """
 
 from __future__ import annotations
@@ -56,6 +72,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import algorithms as algs
@@ -65,9 +82,12 @@ from repro.core.forest import (Forest, compact_forest, hb_path_matrix,
 from repro.core.reuse import (GLOBAL_CACHE, GLOBAL_PLAN_CACHE,
                               MaterializedModel, ModelReuseCache,
                               fingerprint_forest, mesh_signature)
-from repro.db.operators import Operator, StageReport, run_stages, split_into_stages
+from repro.db.operators import (Operator, StageReport, ndevices, run_stages,
+                                split_into_stages)
 from repro.db.store import TensorBlockStore
+from repro.dist.sharding import ForestShardingPlan, make_forest_plan
 from repro.kernels.gather import csr_block_to_dense, gather_inverse_map
+from repro.kernels.ops import default_tree_block
 
 __all__ = ["QueryResult", "CompiledQueryPlan", "ForestQueryEngine"]
 
@@ -87,6 +107,9 @@ class QueryResult:
     reuse_hit: bool = False           # model-cache OR plan-cache hit
     plan_reuse_hit: bool = False      # compiled-plan cache hit specifically
     storage_format: str = "dense"     # which data plane executed (dense/csr)
+    n_parts: int = 1                  # tree partitions (rel plans; mesh =
+    #                                   model-axis size, else heuristic)
+    mesh_devices: int = 1             # devices the query executed across
 
     def breakdown(self) -> dict[str, float]:
         return {
@@ -148,6 +171,9 @@ class ForestQueryEngine:
                  plan_cache: ModelReuseCache | None = None):
         self.store = store
         self.mesh = mesh if mesh is not None else store.mesh
+        # axis mapping for shard_map execution (data = sample blocks,
+        # model = tree blocks); a None axis disables that parallelism
+        self.fplan: ForestShardingPlan = make_forest_plan(self.mesh)
         self.cache = reuse_cache if reuse_cache is not None else GLOBAL_CACHE
         self.plan_cache = (plan_cache if plan_cache is not None
                            else GLOBAL_PLAN_CACHE)
@@ -229,12 +255,10 @@ class ForestQueryEngine:
         if "quickscorer" in algorithm:
             aux["bv"] = jnp.asarray(qs_bitvectors(forest_p.depth))
         spec = None
-        if self.mesh is not None and "model" in self.mesh.axis_names:
-            spec = P("model")
-            sharding = NamedSharding(self.mesh, P("model", None))
-            arrays = {k: jax.device_put(v, sharding)
-                      for k, v in forest_p.arrays().items()}
-            forest_p = dataclasses.replace(forest_p, **arrays)
+        shardings = self.fplan.forest_shardings(forest_p)
+        if shardings is not None:
+            spec = self.fplan.tree_spec
+            forest_p = jax.device_put(forest_p, shardings)
         else:
             forest_p = jax.tree_util.tree_map(jnp.asarray, forest_p)
         jax.block_until_ready(forest_p.arrays())
@@ -245,11 +269,50 @@ class ForestQueryEngine:
     # plan bodies
     # ------------------------------------------------------------------
     def _udf_ops(self, forest: Forest, algorithm: str, true_T: int,
-                 gather: Operator | None = None):
+                 sparse_aux: tuple | None = None):
+        """UDF-centric plan body.  ``sparse_aux`` = (inv_map, f_used) when
+        the dataset is CSR pages (the feature-gather prepass input)."""
         predict_sum, _ = _predict_sum_fn(algorithm)
         meta = dict(model_type=forest.model_type, task=forest.task,
                     num_trees=true_T, base_score=forest.base_score)
+        fplan = self.fplan
 
+        if fplan.mesh is not None and fplan.data_axis is not None:
+            # DATA parallelism under shard_map: sample blocks sharded over
+            # ``data``, the forest replicated per device.  The CSR gather
+            # runs INSIDE the body, so the dense compact tile only ever
+            # exists at the LOCAL batch (never [B_global, F_used]).
+            if sparse_aux is not None:
+                inv_map, f_used = sparse_aux
+
+                def body(x_local, f_local, inv_local):
+                    tile = csr_block_to_dense(x_local, inv_local, f_used)
+                    return predict_sum(f_local, tile)
+            else:
+                inv_map = jnp.zeros((1,), jnp.int32)    # unused placeholder
+
+                def body(x_local, f_local, inv_local):
+                    return predict_sum(f_local, x_local)
+
+            sm = shard_map(body, mesh=fplan.mesh,
+                           in_specs=(fplan.x_spec, fplan.replicated_spec,
+                                     fplan.replicated_spec),
+                           out_specs=fplan.out_spec, check_rep=False)
+
+            def udf(state):
+                state = dict(state)
+                x = state.pop("x")
+                state["pred"] = post.postprocess(sm(x, forest, inv_map),
+                                                 **meta)
+                return state
+
+            return [
+                Operator("scan", lambda s: s),
+                Operator("transform:forest-udf@shard_map", udf),
+                Operator("write", lambda s: s, breaker=True),
+            ]
+
+        # single-device template (also: mesh without a data axis)
         def udf(state):
             x = state["x"]
             state = dict(state)
@@ -257,34 +320,78 @@ class ForestQueryEngine:
             return state
 
         ops = [Operator("scan", lambda s: s)]
-        if gather is not None:
-            ops.append(gather)
+        if sparse_aux is not None:
+            ops.append(self._gather_operator(*sparse_aux))
         ops += [
             Operator("transform:forest-udf", udf),
             Operator("write", lambda s: s, breaker=True),
         ]
         return ops
 
-    def _rel_ops(self, mat: MaterializedModel, algorithm: str):
+    def _rel_ops(self, mat: MaterializedModel, algorithm: str,
+                 n_parts: int):
         predict_sum, fused = _predict_sum_fn(algorithm)
         forest = mat.forest
         meta = dict(model_type=forest.model_type, task=forest.task,
                     num_trees=mat.true_num_trees, base_score=forest.base_score)
-        mesh = self.mesh
-        n_parts = (mesh.shape["model"]
-                   if mesh is not None and "model" in mesh.axis_names else 4)
-        n_parts = min(n_parts, forest.num_trees)
+        fplan = self.fplan
+        sparse_aux = (mat.aux["inv_map"], mat.aux["f_used"]) \
+            if "inv_map" in mat.aux else None
 
+        def postprocess_op(state):
+            state = dict(state)
+            state["pred"] = post.postprocess(state.pop("summed"), **meta)
+            return state
+
+        if fplan.mesh is not None and fplan.model_axis is not None:
+            # MODEL (x DATA) parallelism under shard_map: the partition
+            # stage laid the tree axis out over ``model`` (n_parts ==
+            # n_model), so CROSS-PRODUCT + PARTIAL-AGGREGATE collapse into
+            # ONE local fused kernel launch per device — each body call
+            # sums its LOCAL tree shard in-kernel — followed by a single
+            # psum over ``model``.  The [n_parts, B] partials never cross
+            # a stage boundary; the CSR gather prepass runs inside the
+            # body so compact tiles only ever exist at the local batch.
+            inv_map = sparse_aux[0] if sparse_aux else \
+                jnp.zeros((1,), jnp.int32)
+            f_used = sparse_aux[1] if sparse_aux else 0
+            model_axis = fplan.model_axis
+
+            def body(x_local, f_local, inv_local):
+                if sparse_aux is not None:
+                    x_local = csr_block_to_dense(x_local, inv_local, f_used)
+                part = predict_sum(f_local, x_local)       # [B_local]
+                return jax.lax.psum(part, model_axis)
+
+            sm = shard_map(body, mesh=fplan.mesh,
+                           in_specs=(fplan.x_spec, fplan.tree_spec,
+                                     fplan.replicated_spec),
+                           out_specs=fplan.out_spec, check_rep=False)
+
+            def cross_product(state):
+                state = dict(state)
+                state["summed"] = sm(state.pop("x"), forest, inv_map)
+                return state
+
+            return [
+                Operator("scan", lambda s: s),
+                Operator("cross-product:psum-agg", cross_product,
+                         breaker=True),
+                Operator("postprocess", postprocess_op),
+                Operator("write", lambda s: s, breaker=True),
+            ]
+
+        # --- mesh-less template (the paper's stage-by-stage rel plan) ----
         def cross_product(state):
             """CROSS-PRODUCT(tree partition, sample block) -> partial sums.
 
             Model parallelism: partial[p, b] = sum of tree scores of
-            partition p on sample b.  On a mesh this runs under shard_map
-            with the tree axis sharded; locally it is a reshaped vmap —
-            identical math, same [n_parts, B] partials.  Fused backends
-            aggregate in-kernel per partition, so the per-partition call
-            already yields [B] and the unrolled partition loop replaces
-            the vmap (pallas grids don't batch)."""
+            partition p on sample b.  Fused backends aggregate in-kernel
+            per partition, so the per-partition call already yields [B]
+            and the unrolled partition loop replaces the vmap (pallas
+            grids don't batch).  This unrolled loop is the template the
+            shard_map path above distributes: partition p's launch is
+            device p's local launch."""
             x = state["x"]
             T = forest.num_trees
             per = T // n_parts
@@ -305,21 +412,23 @@ class ForestQueryEngine:
 
         def aggregate(state):
             state = dict(state)
-            state["summed"] = jnp.sum(state.pop("partials"), axis=0)
-            return state
-
-        def postprocess_op(state):
-            state = dict(state)
-            state["pred"] = post.postprocess(state.pop("summed"), **meta)
+            parts = state.pop("partials")                     # [P, B]
+            # sequential fold in partition order — the association
+            # XLA:CPU's all-reduce uses, so the shard_map+psum path above
+            # reproduces this sum BIT-identically in f32 (jnp.sum's
+            # reduction tree would not)
+            summed = parts[0]
+            for p in range(1, parts.shape[0]):
+                summed = summed + parts[p]
+            state["summed"] = summed
             return state
 
         ops = [Operator("scan", lambda s: s)]
-        if "inv_map" in mat.aux:
+        if sparse_aux is not None:
             # sparse plane: the gather prepass shares the cross-product
             # stage (the compact tile is its VMEM input, not a new
             # materialization boundary)
-            ops.append(self._gather_operator(mat.aux["inv_map"],
-                                             mat.aux["f_used"]))
+            ops.append(self._gather_operator(*sparse_aux))
         ops += [
             Operator("cross-product:partial-agg", cross_product,
                      breaker=True),
@@ -328,6 +437,35 @@ class ForestQueryEngine:
             Operator("write", lambda s: s, breaker=True),
         ]
         return ops
+
+    # ------------------------------------------------------------------
+    # rel-plan partitioning granularity
+    # ------------------------------------------------------------------
+    def _resolve_n_parts(self, forest: Forest, algorithm: str,
+                         n_parts: int | None) -> int:
+        """Tree-partition count for the rel plans.
+
+        On a model mesh the physical partitioning IS the mesh: one tree
+        shard per device along ``model`` (an explicit ``n_parts`` is
+        ignored — the partition stage must lay trees out evenly over the
+        axis).  Mesh-less, kernel-backed algorithms derive the default
+        from the kernel's tree-block heuristic (ceil(T / tree_block)):
+        one partition per kernel tree block, so the unrolled
+        cross-product launches exactly the passes the kernel would make
+        anyway — replacing the old magic ``n_parts = 4``.  The jnp
+        backends have no tree blocks (their vmap'd partial is one fused
+        XLA op regardless), so they keep the small thread-count-like
+        default.  Callers can override via ``infer(..., n_parts=...)``.
+        """
+        if self.fplan.model_axis is not None:
+            return self.fplan.n_model
+        if n_parts is None:
+            if "pallas" not in algorithm:
+                return min(4, forest.num_trees)
+            _, fused = _predict_sum_fn(algorithm)
+            bt = default_tree_block(forest, fused=fused)
+            return max(1, -(-forest.num_trees // bt))
+        return max(1, int(n_parts))
 
     # ------------------------------------------------------------------
     # entry point
@@ -342,14 +480,26 @@ class ForestQueryEngine:
         batch_pages: int | None = None,
         write_as: str | None = None,
         model_id: str | None = None,
+        n_parts: int | None = None,
     ) -> QueryResult:
-        """Run the end-to-end inference query (paper's measured pipeline)."""
+        """Run the end-to-end inference query (paper's measured pipeline).
+
+        ``n_parts`` overrides the rel plans' tree-partition count on the
+        MESH-LESS path (default: one partition per kernel tree block); a
+        model mesh fixes the count to its ``model``-axis size.
+        """
         if plan not in ("udf", "rel", "rel+reuse"):
             raise ValueError(f"unknown plan {plan!r}")
         ds = self.store.get(dataset)
         fmt = getattr(ds, "storage_format", "dense")
         t_query0 = time.perf_counter()
         batch_pages = batch_pages or ds.num_pages
+        if self.fplan.n_data > 1:
+            # shard_map needs page batches that divide evenly over the
+            # data axis; num_pages itself is a data-axis multiple (the
+            # store pads ingests to guarantee it), so round up and clamp
+            nd = self.fplan.n_data
+            batch_pages = min(-(-batch_pages // nd) * nd, ds.num_pages)
 
         # the batch signature pins every block shape the stage jits will
         # see, so a plan-cache hit implies zero re-tracing.  The storage
@@ -374,24 +524,24 @@ class ForestQueryEngine:
             pkey = ("udf-plan", mid, algorithm, fmt, batch_sig, mesh_id)
 
             def build_udf() -> CompiledQueryPlan:
-                f, gather = forest, None
+                f, sparse_aux = forest, None
                 if fmt == "csr":
                     cf, inv_map, f_used = self._sparse_prepass(forest)
                     f = cf
-                    gather = self._gather_operator(inv_map, f_used)
+                    sparse_aux = (inv_map, f_used)
                 fp, true_T = pad_trees(f, 1)
                 stages = split_into_stages(
-                    self._udf_ops(fp, algorithm, true_T, gather=gather))
+                    self._udf_ops(fp, algorithm, true_T,
+                                  sparse_aux=sparse_aux))
                 return CompiledQueryPlan(stages=stages,
                                          num_stages=len(stages))
 
             before = self.plan_cache.stats.hits
             qplan = self.plan_cache.get_or_build(pkey, build_udf)
             plan_hit = self.plan_cache.stats.hits > before
+            n_parts = 1
         else:
-            n_parts = (self.mesh.shape["model"]
-                       if self.mesh is not None and
-                       "model" in self.mesh.axis_names else 4)
+            n_parts = self._resolve_n_parts(forest, algorithm, n_parts)
             t0 = time.perf_counter()
             if plan == "rel+reuse":
                 mid = self._model_key(forest, model_id)
@@ -412,6 +562,7 @@ class ForestQueryEngine:
                 materialized_bytes=sum(
                     a.size * a.dtype.itemsize
                     for a in mat.forest.arrays().values()),
+                devices=ndevices(mat.forest.arrays()),
             )]
 
             if plan == "rel+reuse":
@@ -427,7 +578,8 @@ class ForestQueryEngine:
                         batch_sig, mesh_id, id(mat))
 
                 def build_rel() -> CompiledQueryPlan:
-                    stages = split_into_stages(self._rel_ops(mat, algorithm))
+                    stages = split_into_stages(
+                        self._rel_ops(mat, algorithm, n_parts))
                     return CompiledQueryPlan(stages=stages,
                                              num_stages=len(stages) + 1,
                                              mat=mat)
@@ -436,7 +588,8 @@ class ForestQueryEngine:
                 qplan = self.plan_cache.get_or_build(pkey, build_rel)
                 plan_hit = self.plan_cache.stats.hits > before
             else:
-                stages = split_into_stages(self._rel_ops(mat, algorithm))
+                stages = split_into_stages(
+                    self._rel_ops(mat, algorithm, n_parts))
                 qplan = CompiledQueryPlan(stages=stages,
                                           num_stages=len(stages) + 1)
 
@@ -451,6 +604,16 @@ class ForestQueryEngine:
             state, reps = run_stages(stages, state)
             preds.append(state["pred"])
             reports.extend(reps)
+        if len(preds) > 1 and self.mesh is not None and \
+                len(self.mesh.axis_names) > 1:
+            # jax 0.4.37 XLA:CPU miscompiles eager concatenate of
+            # PARTIALLY replicated operands (replica values are summed,
+            # e.g. a P('data')-sharded [B] on a (data, model) mesh comes
+            # out n_model times too large).  Fully replicating each batch
+            # output first sidesteps it — [B] floats, negligible next to
+            # the blocks themselves.
+            rep = NamedSharding(self.mesh, P())
+            preds = [jax.device_put(p, rep) for p in preds]
         predictions = jnp.concatenate(preds)[: ds.num_rows]
 
         write_s = 0.0
@@ -484,4 +647,6 @@ class ForestQueryEngine:
             reuse_hit=reuse_hit,
             plan_reuse_hit=plan_hit,
             storage_format=fmt,
+            n_parts=n_parts,
+            mesh_devices=(self.mesh.size if self.mesh is not None else 1),
         )

@@ -133,6 +133,24 @@ class TensorBlockStore:
         self.default_page_rows = default_page_rows
         self._datasets: dict[str, StoredDataset] = {}
 
+    # -- mesh contract ------------------------------------------------------
+    @property
+    def data_axis_size(self) -> int:
+        """Mesh ``data``-axis size (1 off-mesh).  Every ingest pads its
+        page count to a multiple of this, so any whole-dataset batch
+        divides evenly for the query plans' shard_map."""
+        if self.mesh is not None and "data" in self.mesh.axis_names:
+            return int(self.mesh.shape["data"])
+        return 1
+
+    def data_sharding(self) -> NamedSharding | None:
+        """Row/page sharding for stored blocks: dim 0 over ``data``,
+        replicated over ``model`` (None off-mesh).  One definition for
+        dense pages, CSR page arrays, and result writes."""
+        if self.mesh is not None and "data" in self.mesh.axis_names:
+            return NamedSharding(self.mesh, P("data", None))
+        return None
+
     # -- ingestion ----------------------------------------------------------
     def put(
         self,
@@ -150,17 +168,14 @@ class TensorBlockStore:
         arr = np.asarray(jax.device_get(data))
         n = arr.shape[0]
         # page padding AND divisibility by the data axis
-        row_multiple = page_rows
-        if self.mesh is not None and "data" in self.mesh.axis_names:
-            row_multiple = int(np.lcm(page_rows,
-                                      self.mesh.shape["data"] * page_rows))
+        row_multiple = self.data_axis_size * page_rows
         pad = (-n) % row_multiple
         if pad:
             arr = np.concatenate(
                 [arr, np.full((pad, arr.shape[1]), np.nan, arr.dtype)])
         dev = jnp.asarray(arr, dtype)
-        if self.mesh is not None:
-            sharding = NamedSharding(self.mesh, P("data", None))
+        sharding = self.data_sharding()
+        if sharding is not None:
             dev = jax.device_put(dev, sharding)
         lab = None
         if labels is not None:
@@ -198,9 +213,7 @@ class TensorBlockStore:
         rows, and the page count pads to the mesh ``data`` axis.
         """
         page_rows = page_rows or self.default_page_rows
-        pages_multiple = 1
-        if self.mesh is not None and "data" in self.mesh.axis_names:
-            pages_multiple = int(self.mesh.shape["data"])
+        pages_multiple = self.data_axis_size
 
         if pages is not None:
             if num_rows is None:
@@ -223,8 +236,8 @@ class TensorBlockStore:
             pages = CSRPages(indptr=jnp.asarray(ip), indices=jnp.asarray(ix),
                              values=jnp.asarray(vl),
                              n_features=int(num_features))
-        if self.mesh is not None and "data" in self.mesh.axis_names:
-            sharding = NamedSharding(self.mesh, P("data", None))
+        sharding = self.data_sharding()
+        if sharding is not None:
             pages = dataclasses.replace(
                 pages,
                 indptr=jax.device_put(pages.indptr, sharding),

@@ -7,9 +7,11 @@ layer code (DESIGN.md §5).
 """
 
 from repro.dist.sharding import (  # noqa: F401
+    ForestShardingPlan,
     ShardingPlan,
     batch_specs,
     cache_specs,
+    make_forest_plan,
     make_plan,
     param_specs,
     tree_named,

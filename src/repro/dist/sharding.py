@@ -38,7 +38,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = [
     "ShardingPlan",
+    "ForestShardingPlan",
     "make_plan",
+    "make_forest_plan",
     "param_specs",
     "batch_specs",
     "cache_specs",
@@ -142,6 +144,98 @@ def make_plan(cfg, mesh, decode_batch: int | None = None) -> ShardingPlan:
         model_axis=model, hidden=hidden, decode_hidden=decode_hidden,
         qkv=qkv, kv_ctx=kv_ctx, decode_cache=decode_cache,
         ssm_state=ssm_state)
+
+
+# ---------------------------------------------------------------------------
+# forest-inference sharding (the db/query plans' mesh contract)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ForestShardingPlan:
+    """Frozen axis mapping for multi-device forest inference.
+
+    The paper's two parallelism modes, as mesh axes (DESIGN.md Sec. 3):
+
+      ``data``   sample blocks — the tensor-block store shards dataset
+                 pages (dense rows / CSR page blocks) over it, so every
+                 device scans only its page range;
+      ``model``  tree blocks — the relation-centric plan shards the
+                 forest's tree dimension over it, so the cross-product's
+                 per-partition partial sums are one LOCAL fused kernel
+                 launch per device, combined by a single ``psum``.
+
+    The plan is pure data: ``db/query`` wraps its kernel stages in
+    ``shard_map`` using these specs, and falls back to the single-device
+    template whenever the relevant axis is absent (``data_axis`` /
+    ``model_axis`` is None).  Specs here are BROADCAST specs: a single
+    PartitionSpec applied to every leaf of the corresponding pytree
+    (rows/pages spec to a dense block or to all three CSR page arrays,
+    tree spec to every Forest array — all carry the sharded dim first).
+    """
+
+    mesh: Any                        # Mesh | None (None = single device)
+    data_axis: str | None            # samples/pages axis name, if any
+    model_axis: str | None           # trees axis name, if any
+    n_data: int                      # mesh size along data_axis (1 if none)
+    n_model: int                     # mesh size along model_axis (1 if none)
+
+    @property
+    def x_spec(self) -> P:
+        """Sample blocks [B, F] / CSR page arrays [P, *]: rows over data."""
+        return P(self.data_axis, None)
+
+    @property
+    def tree_spec(self) -> P:
+        """Forest arrays [T, ...]: tree dim over model (broadcast spec)."""
+        return P(self.model_axis)
+
+    @property
+    def replicated_spec(self) -> P:
+        """Side tensors (gather inverse map, udf-plan forests)."""
+        return P()
+
+    @property
+    def out_spec(self) -> P:
+        """Per-sample outputs [B]: rows over data, replicated over model
+        (the rel plan's in-body psum makes them so)."""
+        return P(self.data_axis)
+
+    @property
+    def partial_spec(self) -> P:
+        """[n_parts, B] partial-sum layout, for callers that materialize
+        partials instead of psum-ing in the kernel stage."""
+        return P(self.model_axis, self.data_axis)
+
+    def forest_shardings(self, forest):
+        """NamedSharding tree for a Forest pytree (partition-stage layout);
+        None without a mesh.  Reuses ``tree_named`` on the broadcast spec."""
+        if self.mesh is None or self.model_axis is None:
+            return None
+        import jax as _jax
+        spec_tree = _jax.tree_util.tree_map(lambda _: self.tree_spec, forest)
+        return tree_named(self.mesh, spec_tree)
+
+
+def make_forest_plan(mesh) -> ForestShardingPlan:
+    """Build the forest-inference axis mapping for ``mesh``.
+
+    Any object with ``.shape``/``.axis_names`` works (specs are pure
+    data); executing under ``shard_map`` additionally needs a real Mesh.
+    """
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        return ForestShardingPlan(mesh=None, data_axis=None, model_axis=None,
+                                  n_data=1, n_model=1)
+    names = tuple(mesh.axis_names)
+    data = "data" if "data" in names else None
+    model = "model" if "model" in names else None
+    return ForestShardingPlan(
+        mesh=mesh,
+        data_axis=data,
+        model_axis=model,
+        n_data=int(mesh.shape["data"]) if data else 1,
+        n_model=int(mesh.shape["model"]) if model else 1,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,13 @@ stage as the kernel call and its cost is O(nnz), independent of F.
 Missing-value contract: absent features become ``fill`` (NaN by default),
 so ``default_left`` routing is identical to the dense plane's; page
 padding rows come out all-NaN, mirroring the dense store's NaN pad rows.
+
+Mesh contract: the prepass is shape-driven and page-local, so under
+``shard_map`` (db/query's multi-device kernel stages) it is called INSIDE
+the manual region on the device-LOCAL ``CSRPages`` shard with the
+(replicated) inverse map — the dense compact tile only ever exists at
+``[B_local, F_used]``, never at the global batch, and the scatter needs
+no collectives (every CSR entry lands in its own page's rows).
 """
 
 from __future__ import annotations

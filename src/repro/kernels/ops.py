@@ -21,6 +21,15 @@ Two backend families:
   correct for both SUM and MEAN: padding trees carry zero leaves (add 0.0
   to the sum) and MEAN divides by the TRUE tree count downstream
   (``core.postprocess.postprocess(num_trees=...)``).
+
+All wrappers are shape-driven, so they compose with ``shard_map``: inside
+a manual-sharding region the forest argument is the device-LOCAL tree
+shard and ``x`` the local sample shard — block selection, tree padding and
+the in-kernel sum all operate on local counts, and because per-shard
+padding trees still sum to exactly 0.0, a cross-device ``psum`` of the
+per-shard fused sums equals the global SUM (MEAN again divides by the true
+GLOBAL tree count downstream).  ``default_tree_block`` exposes the
+heuristic tree-block size as the mesh-less tree-partition granularity.
 """
 
 from __future__ import annotations
@@ -51,6 +60,7 @@ __all__ = [
     "FUSED_KERNEL_ALGORITHMS",
     "predict_raw_pallas",
     "predict_sum_pallas",
+    "default_tree_block",
 ]
 
 
@@ -115,6 +125,27 @@ def _blocks(forest: Forest, B, block_b, block_t, *, fused=False):
         block_b = block_b or hb
         block_t = block_t or ht
     return block_b, block_t
+
+
+def default_tree_block(forest: Forest, batch_rows: int = 128, *,
+                       fused: bool = True) -> int:
+    """The tree-block size ``block_heuristics`` would pick for this forest.
+
+    This is the natural tree-PARTITION granularity for the mesh-less
+    relation-centric plan: one partition per kernel tree block means the
+    unrolled cross-product loop launches exactly the passes the fused
+    kernel would make anyway (``db.query`` derives its ``n_parts``
+    default from it, replacing the old magic ``4``).  ``batch_rows`` only
+    matters when the VMEM budget forces a shrink; the tree block is
+    batch-independent in the common case — which is also what keeps the
+    per-shard kernel calls under ``shard_map`` (local tree counts)
+    bit-compatible with the mesh-less unrolled template.
+    """
+    _, bt = block_heuristics(batch_rows, forest.num_trees,
+                             forest.num_internal, forest.num_leaves,
+                             forest.n_features,
+                             max_block_t=32 if fused else 8)
+    return bt
 
 
 def _prepared(forest: Forest, x: jax.Array, block_b, block_t, interpret,

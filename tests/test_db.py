@@ -196,6 +196,55 @@ def test_reuse_cache_is_lru_not_fifo():
     assert cache.get_or_build(("B",), lambda: E(4)).v == 4, "B survived"
 
 
+def test_rel_n_parts_default_derived_from_tree_block(setup):
+    """Mesh-less rel partitioning of kernel-backed algorithms derives
+    from the kernel tree-block heuristic (ceil(T / tree_block)), not the
+    old magic 4; jnp backends (no tree blocks) keep the small default."""
+    store, forest, x = setup
+    from repro.core.forest import make_forest
+    from repro.kernels.ops import default_tree_block
+    from conftest import random_forest_arrays
+    engine = ForestQueryEngine(store, reuse_cache=ModelReuseCache())
+    # jnp backend: thread-count-like default, clamped to the tree count
+    r = engine.infer("test", forest, plan="rel", algorithm="predicated")
+    assert r.n_parts == 4
+    # fused kernel backend, 12 trees <= one 32-tree block -> 1 partition
+    rf = engine.infer("test", forest, plan="rel",
+                      algorithm="predicated_pallas_fused")
+    assert rf.n_parts == 1
+    # a forest wider than one tree block really splits: 100 trees / 32
+    fe, th, dl, lv = random_forest_arrays(np.random.default_rng(5),
+                                          T=100, depth=3, F=8, seed=5)
+    wide = make_forest(fe, th, lv, default_left=dl, n_features=8)
+    bt = default_tree_block(wide, fused=True)
+    assert engine._resolve_n_parts(wide, "predicated_pallas_fused", None) \
+        == -(-100 // bt) == 4
+    direct = predict_proba(forest, jnp.asarray(x), algorithm="predicated")
+    np.testing.assert_allclose(np.asarray(r.predictions),
+                               np.asarray(direct), rtol=1e-5, atol=1e-6)
+
+
+def test_rel_n_parts_override(setup):
+    """infer(n_parts=...) overrides the mesh-less partition count; the
+    partition count is part of both rel cache keys (no false sharing)."""
+    store, forest, x = setup
+    engine = ForestQueryEngine(store, reuse_cache=ModelReuseCache(),
+                               plan_cache=ModelReuseCache())
+    kw = dict(algorithm="predicated_pallas_fused", plan="rel+reuse",
+              model_id="np-m1")
+    r3 = engine.infer("test", forest, n_parts=3, **kw)
+    assert r3.n_parts == 3
+    r4 = engine.infer("test", forest, n_parts=4, **kw)
+    assert r4.n_parts == 4 and not r4.reuse_hit, \
+        "different n_parts must be a different materialization + plan"
+    again = engine.infer("test", forest, n_parts=3, **kw)
+    assert again.reuse_hit and again.n_parts == 3
+    direct = predict_proba(forest, jnp.asarray(x), algorithm="predicated")
+    for r in (r3, r4):
+        np.testing.assert_allclose(np.asarray(r.predictions),
+                                   np.asarray(direct), rtol=1e-5, atol=1e-6)
+
+
 def test_batching_equivalence(setup):
     """F3: page-batched execution must equal single-batch execution."""
     store, forest, x = setup

@@ -1,0 +1,316 @@
+"""Multi-device fused inference: shard_map tree-parallel partials.
+
+Runs only under a forced multi-device CPU topology:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest tests/test_multidevice.py
+
+(the CI ``multi-device-smoke`` job does exactly that; under the plain
+tier-1 run these tests skip).
+
+The contracts under test:
+  * rel plan on a (data x model) mesh == mesh-less unrolled template with
+    the SAME partition count, BIT-identically in f32 (the mesh-less
+    aggregate folds partials in partition order — the association
+    XLA:CPU's all-reduce uses);
+  * udf plan on a mesh == mesh-less udf, bit-identically (pure data
+    parallelism; per-row math is batch-placement-independent);
+  * the rel plan's kernel stage lowers to ONE shard_map-wrapped fused
+    kernel call plus a single psum — no [B, T] intermediate, no
+    per-partition unrolled launches (asserted on the jaxpr, recursively);
+  * plan-cache correctness across meshes: same model on 1-device and
+    8-device topologies -> DISTINCT cache entries, identical predictions;
+  * the CSR feature-gather prepass runs inside the shard_map body: the
+    compact tile exists only at the LOCAL batch.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.reuse import ModelReuseCache
+from repro.core.train import TrainConfig, train_forest
+from repro.db.query import ForestQueryEngine
+from repro.db.store import TensorBlockStore
+
+NDEV = len(jax.devices())
+pytestmark = pytest.mark.skipif(
+    NDEV < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+FUSED = ["predicated_pallas_fused", "hummingbird_pallas_fused",
+         "quickscorer_pallas_fused"]
+B, F, T, PAGE = 512, 16, 24, 64
+
+
+def _mesh(n_data, n_model):
+    devs = np.array(jax.devices()[: n_data * n_model])
+    return Mesh(devs.reshape(n_data, n_model), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def data_and_forest():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(B, F)).astype(np.float32)
+    w = rng.normal(size=F).astype(np.float32)
+    y = (x @ w > 0).astype(np.float32)
+    forest = train_forest(x, y, TrainConfig(model_type="xgboost",
+                                            num_trees=T, max_depth=4))
+    return x, y, forest
+
+
+def _engine(x, mesh, *, plan_cache=None, page_rows=PAGE):
+    store = TensorBlockStore(mesh, default_page_rows=page_rows)
+    store.put("d", x)
+    return ForestQueryEngine(
+        store, reuse_cache=ModelReuseCache(),
+        plan_cache=plan_cache if plan_cache is not None else ModelReuseCache())
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: mesh vs mesh-less template
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algorithm", FUSED)
+def test_rel_mesh_bitwise_matches_meshless(data_and_forest, algorithm):
+    """(data=2, model=4) mesh rel == mesh-less rel with n_parts=4, bitwise."""
+    x, _, forest = data_and_forest
+    em = _engine(x, _mesh(2, 4))
+    es = _engine(x, None)
+    rm = em.infer("d", forest, algorithm=algorithm, plan="rel")
+    rs = es.infer("d", forest, algorithm=algorithm, plan="rel", n_parts=4)
+    assert rm.n_parts == 4 and rs.n_parts == 4
+    assert rm.mesh_devices == 8 and rs.mesh_devices == 1
+    assert np.array_equal(np.asarray(rm.predictions),
+                          np.asarray(rs.predictions)), "f32 bitwise parity"
+
+
+def test_rel_mesh_shapes(data_and_forest):
+    """All-model (1, 8) and all-data (8, 1)-style topologies agree too."""
+    x, _, forest = data_and_forest
+    alg = FUSED[0]
+    es = _engine(x, None)
+    rs8 = es.infer("d", forest, algorithm=alg, plan="rel", n_parts=8)
+    rm18 = _engine(x, _mesh(1, 8)).infer("d", forest, algorithm=alg,
+                                         plan="rel")
+    assert rm18.n_parts == 8
+    assert np.array_equal(np.asarray(rm18.predictions),
+                          np.asarray(rs8.predictions))
+    # data-only mesh: rel falls back to the unrolled template (no model
+    # axis), x stays sharded — predictions still match the template
+    mesh_d = Mesh(np.array(jax.devices()), ("data",))
+    rmd = _engine(x, mesh_d).infer("d", forest, algorithm=alg, plan="rel",
+                                   n_parts=8)
+    assert np.array_equal(np.asarray(rmd.predictions),
+                          np.asarray(rs8.predictions))
+
+
+@pytest.mark.parametrize("algorithm", FUSED[:1])
+def test_udf_mesh_bitwise_matches_meshless(data_and_forest, algorithm):
+    x, _, forest = data_and_forest
+    rm = _engine(x, _mesh(2, 4)).infer("d", forest, algorithm=algorithm,
+                                       plan="udf")
+    rs = _engine(x, None).infer("d", forest, algorithm=algorithm, plan="udf")
+    assert np.array_equal(np.asarray(rm.predictions),
+                          np.asarray(rs.predictions))
+
+
+def test_unfused_algorithm_under_mesh_rel(data_and_forest):
+    """jnp (non-pallas) backends run through the same shard_map body:
+    local predict+sum then psum — parity within f32 reassociation."""
+    x, _, forest = data_and_forest
+    from repro.core.postprocess import predict_proba
+    rm = _engine(x, _mesh(2, 4)).infer("d", forest, algorithm="predicated",
+                                       plan="rel")
+    want = predict_proba(forest, jnp.asarray(x), algorithm="predicated")
+    np.testing.assert_allclose(np.asarray(rm.predictions),
+                               np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_batch_pages_round_to_data_axis(data_and_forest):
+    """Odd page batches round up to the data-axis multiple (shard_map
+    needs even division) — batched == whole-dataset, bitwise."""
+    x, _, forest = data_and_forest
+    em = _engine(x, _mesh(2, 4))
+    whole = em.infer("d", forest, algorithm=FUSED[0], plan="udf")
+    batched = em.infer("d", forest, algorithm=FUSED[0], plan="udf",
+                       batch_pages=3)
+    assert np.array_equal(np.asarray(batched.predictions),
+                          np.asarray(whole.predictions))
+
+
+# ---------------------------------------------------------------------------
+# jaxpr structure: one fused launch per device + a single psum
+# ---------------------------------------------------------------------------
+
+
+def _walk(jaxpr, depth=0, out=None):
+    if out is None:
+        out = []
+    for eqn in jaxpr.eqns:
+        out.append((depth, eqn.primitive.name,
+                    [tuple(getattr(v.aval, "shape", ()))
+                     for v in eqn.outvars]))
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+                _walk(v.jaxpr, depth + 1, out)
+            elif hasattr(v, "eqns"):
+                _walk(v, depth + 1, out)
+    return out
+
+
+def test_rel_mesh_kernel_stage_jaxpr(data_and_forest):
+    """The acceptance assertion: the rel plan's kernel stage is ONE
+    shard_map containing ONE fused pallas_call and ONE psum — no
+    [B, T]-shaped intermediate anywhere, no unrolled per-partition
+    launches."""
+    x, _, forest = data_and_forest
+    em = _engine(x, _mesh(2, 4))
+    alg = "predicated_pallas_fused"
+    mat = em._partition_model(forest, alg, 4)
+    ops = em._rel_ops(mat, alg, 4)
+    cp = next(op for op in ops if op.name.startswith("cross-product"))
+    ds = em.store.get("d")
+    state = {"x": ds.page_slice(0, ds.num_pages)}
+    eqns = _walk(jax.make_jaxpr(cp.fn)(state).jaxpr)
+
+    assert sum(1 for _, n, _ in eqns if n == "shard_map") == 1
+    assert sum(1 for _, n, _ in eqns if n == "pallas_call") == 1, \
+        "per-partition unrolled kernel launches leaked into the mesh path"
+    assert sum(1 for _, n, _ in eqns if n == "psum") == 1
+
+    T_pad = mat.forest.num_trees
+    b_padded = ds.data.shape[0]
+    banned = {(b_padded, T_pad), (b_padded // 2, T_pad),
+              (b_padded, T), (b_padded // 2, T)}
+    seen = {s for _, _, shapes in eqns for s in shapes}
+    assert not (seen & banned), f"[B, T] materialization: {seen & banned}"
+
+
+# ---------------------------------------------------------------------------
+# plan-cache correctness across meshes
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_distinct_entries_across_meshes(data_and_forest):
+    """Same model on 1-device and 8-device topologies: distinct compiled
+    plans (no false sharing), identical f32 predictions bit for bit."""
+    x, _, forest = data_and_forest
+    shared_plans = ModelReuseCache()
+    alg = FUSED[0]
+    e1 = _engine(x, None, plan_cache=shared_plans)
+    e8 = _engine(x, _mesh(1, 8), plan_cache=shared_plans)
+    kw = dict(algorithm=alg, model_id="xmesh")
+
+    r1u = e1.infer("d", forest, plan="udf", **kw)
+    r8u = e8.infer("d", forest, plan="udf", **kw)
+    assert not r8u.plan_reuse_hit, "8-device udf plan hit the 1-device entry"
+    r1r = e1.infer("d", forest, plan="rel+reuse", n_parts=8, **kw)
+    r8r = e8.infer("d", forest, plan="rel+reuse", **kw)
+    assert not r8r.plan_reuse_hit, "8-device rel plan hit the 1-device entry"
+    assert len(shared_plans) == 4
+
+    assert np.array_equal(np.asarray(r1u.predictions),
+                          np.asarray(r8u.predictions))
+    assert np.array_equal(np.asarray(r1r.predictions),
+                          np.asarray(r8r.predictions))
+
+    # steady state on both topologies stays hit-separated
+    assert e1.infer("d", forest, plan="udf", **kw).plan_reuse_hit
+    assert e8.infer("d", forest, plan="udf", **kw).plan_reuse_hit
+
+
+# ---------------------------------------------------------------------------
+# sparse plane under the mesh
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sparse_setup():
+    rng = np.random.default_rng(7)
+    Fw = 400
+    x = rng.normal(size=(256, Fw)).astype(np.float32)
+    x[rng.random(x.shape) < 0.9] = np.nan
+    w = rng.normal(size=Fw).astype(np.float32)
+    y = (np.nan_to_num(x) @ w > 0).astype(np.float32)
+    forest = train_forest(np.nan_to_num(x[:, :64]), y,
+                          TrainConfig(model_type="xgboost", num_trees=12,
+                                      max_depth=4))
+    forest = dataclasses.replace(forest, n_features=Fw)
+    return x, forest
+
+
+@pytest.mark.parametrize("plan", ["udf", "rel"])
+def test_sparse_mesh_parity(sparse_setup, plan):
+    """CSR pages through the mesh plans: gather runs inside the shard_map
+    body, predictions bit-identical to the mesh-less CSR path and equal
+    to the dense plane."""
+    x, forest = sparse_setup
+    alg = "hummingbird_pallas_fused"
+
+    def put_both(mesh):
+        store = TensorBlockStore(mesh, default_page_rows=32)
+        store.put("d", x)
+        store.put_sparse("d@csr", x)
+        return ForestQueryEngine(store, reuse_cache=ModelReuseCache(),
+                                 plan_cache=ModelReuseCache())
+
+    em, es = put_both(_mesh(2, 4)), put_both(None)
+    kw = dict(algorithm=alg, plan=plan)
+    if plan == "rel":
+        rm = em.infer("d@csr", forest, **kw)
+        rs = es.infer("d@csr", forest, n_parts=rm.n_parts, **kw)
+    else:
+        rm = em.infer("d@csr", forest, **kw)
+        rs = es.infer("d@csr", forest, **kw)
+    assert rm.storage_format == "csr"
+    assert np.array_equal(np.asarray(rm.predictions),
+                          np.asarray(rs.predictions))
+    dense = es.infer("d", forest, algorithm=alg, plan="udf")
+    np.testing.assert_allclose(np.asarray(rm.predictions),
+                               np.asarray(dense.predictions),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sparse_gather_is_local_in_jaxpr(sparse_setup):
+    """The compact tile inside the shard_map body is [B_LOCAL, f_used]:
+    no global-batch-sized gather output exists in the kernel stage."""
+    x, forest = sparse_setup
+    alg = "hummingbird_pallas_fused"
+    mesh = _mesh(2, 4)
+    store = TensorBlockStore(mesh, default_page_rows=32)
+    store.put_sparse("d@csr", x)
+    em = ForestQueryEngine(store, reuse_cache=ModelReuseCache(),
+                           plan_cache=ModelReuseCache())
+    mat = em._partition_model(forest, alg, 4, storage_format="csr")
+    f_used = mat.aux["f_used"]
+    ops = em._rel_ops(mat, alg, 4)
+    cp = next(op for op in ops if op.name.startswith("cross-product"))
+    ds = store.get("d@csr")
+    state = {"x": ds.page_slice(0, ds.num_pages)}
+    eqns = _walk(jax.make_jaxpr(cp.fn)(state).jaxpr)
+
+    rows_global = ds.num_pages * ds.page_rows
+    rows_local = rows_global // 2                     # n_data = 2
+    seen = {s for _, _, shapes in eqns for s in shapes}
+    assert (rows_global, f_used) not in seen, \
+        "CSR gather ran at the GLOBAL batch"
+    assert any(s == (rows_local, f_used) for s in seen), \
+        f"expected a [B_local, f_used]=({rows_local}, {f_used}) tile"
+
+
+def test_stage_reports_record_device_span(data_and_forest):
+    x, _, forest = data_and_forest
+    em = _engine(x, _mesh(2, 4))
+    res = em.infer("d", forest, algorithm=FUSED[0], plan="rel")
+    kernel_stages = [r for r in res.stage_reports
+                     if any("cross-product" in o for o in r.operators)]
+    assert kernel_stages and all(r.devices == 8 for r in kernel_stages)
+    partition = [r for r in res.stage_reports if "partition" in r.name]
+    assert partition and partition[0].devices == 8
