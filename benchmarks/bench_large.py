@@ -1,13 +1,35 @@
 """Paper Tab. 4–6: MEDIUM/LARGE dense datasets (Higgs, Airline, TPCx-AI,
 row-scaled).  Claims: netsdb-udf wins small models by avoiding transfer;
 netsdb-rel (model parallelism) overtakes udf as trees grow; the netsDB
-advantage shrinks as inference compute starts to dominate."""
+advantage shrinks as inference compute starts to dominate.
+
+STREAMING section (``run_stream`` / BENCH_stream.json): the paper's
+"large-scale datasets" scenario class — datasets that do NOT fit device
+memory.  A dataset ≥ 4x ``device_budget_bytes`` is ingested (auto-spills
+to the host tier) and streamed through the double-buffered scan executor
+(``repro.db.executor``), for both udf and rel plans.  Each record
+reports the transfer/compute overlap fraction: the synchronous reference
+pipeline (``prefetch_depth=1``) exposes the full page-DMA wait, the
+double-buffered run (``prefetch_depth=2``) hides what it can, and
+
+    overlap_fraction = 1 - wait_streamed / wait_serial
+
+is the hidden share.  ``run_stream`` RAISES if the budgeted ingest
+stayed device-resident or if streamed predictions diverge from the
+all-device-resident run — the CI ``streaming-smoke`` job runs it with
+``--fast`` and a deliberately tiny budget so out-of-core paging cannot
+silently regress.
+"""
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import tempfile
+import time
+
+import numpy as np
 
 from benchmarks import common as C
 from repro.core.reuse import ModelReuseCache
@@ -16,6 +38,9 @@ from repro.db.query import ForestQueryEngine
 from repro.db.store import TensorBlockStore
 
 ALGO = "predicated"
+STREAM_ALGO = "predicated_pallas_fused"
+BENCH_STREAM_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_stream.json")
 
 
 def run(datasets=("higgs", "airline", "tpcxai"), trees=C.TREE_GRID,
@@ -46,15 +71,117 @@ def run(datasets=("higgs", "airline", "tpcxai"), trees=C.TREE_GRID,
     return rows
 
 
+def run_stream(datasets=("higgs",), trees=C.FAST_TREE_GRID, scale=1.0,
+               device_budget_bytes=None, algo=STREAM_ALGO, page_rows=512):
+    """Out-of-core streaming scan vs the all-device-resident run.
+
+    Returns (rows, records).  Raises if the budgeted ingest failed to
+    spill to the host tier or if streamed predictions diverge from the
+    device-resident reference — this doubles as the CI smoke.
+    """
+    rows, records = [], []
+    for ds in datasets:
+        x, y = C.bench_data(ds, scale=scale)
+        # out-of-core by construction: the dataset is >= 4x the budget
+        budget = device_budget_bytes or max(x.nbytes // 4, 1)
+        store = TensorBlockStore(default_page_rows=page_rows,
+                                 device_budget_bytes=budget)
+        stored = store.put(ds, x)
+        if stored.tier != "host":
+            raise RuntimeError(
+                f"{ds}: ingest of {stored.nbytes} B under a {budget} B "
+                f"device budget stayed {stored.tier!r}-resident — "
+                f"out-of-core spill regressed")
+        store_dev = TensorBlockStore(default_page_rows=page_rows)
+        store_dev.put(ds, x)
+        engine = ForestQueryEngine(store, reuse_cache=ModelReuseCache(),
+                                   plan_cache=ModelReuseCache())
+        engine_dev = ForestQueryEngine(store_dev,
+                                       reuse_cache=ModelReuseCache(),
+                                       plan_cache=ModelReuseCache())
+        for T in trees:
+            forest = C.get_forest(ds, "xgboost", T)
+            base = dict(dataset=ds, model="xgboost", trees=T)
+            for plan in ("udf", "rel"):
+                kw = dict(algorithm=algo, plan=plan)
+                # synchronous reference first (cold compile lands here),
+                # then the double-buffered run, then the device-resident
+                # parity reference at the SAME batching
+                serial = engine.infer(ds, forest, prefetch_depth=1, **kw)
+                stream = engine.infer(ds, forest, prefetch_depth=2, **kw)
+                ref = engine_dev.infer(ds, forest,
+                                       batch_pages=stream.scan.batch_pages,
+                                       **kw)
+                if not np.array_equal(np.asarray(stream.predictions),
+                                      np.asarray(ref.predictions)):
+                    raise RuntimeError(
+                        f"{ds}/{plan}: streamed predictions diverge from "
+                        f"the device-resident run — parity broke")
+                sc, ss = stream.scan, serial.scan
+                overlap = max(0.0, 1.0 - sc.transfer_wait_s
+                              / max(ss.transfer_wait_s, 1e-9))
+                rows.append({**base, "platform": f"netsdb-{plan}-stream",
+                             "load_s": 0.0,
+                             "infer_s": round(stream.infer_s
+                                              + stream.partition_s, 4),
+                             "write_s": round(stream.write_s
+                                              + stream.aggregate_s, 4),
+                             "total_s": round(stream.total_s, 4),
+                             "checksum": float(np.sum(np.asarray(
+                                 stream.predictions)))})
+                records.append(dict(
+                    dataset=ds, trees=T, algorithm=algo, plan=plan,
+                    rows=x.shape[0], features=x.shape[1],
+                    dataset_bytes=stored.nbytes,
+                    device_budget_bytes=budget,
+                    tier=stream.tier, out_of_core=True,
+                    batch_pages=sc.batch_pages, batches=sc.batches,
+                    max_in_flight=sc.max_in_flight,
+                    bytes_streamed=sc.bytes_streamed,
+                    transfer_wait_serial_s=round(ss.transfer_wait_s, 5),
+                    transfer_wait_stream_s=round(sc.transfer_wait_s, 5),
+                    overlap_fraction=round(overlap, 4),
+                    compute_s=round(sc.compute_s, 5),
+                    drain_s=round(sc.drain_s, 5),
+                    serial_wall_s=round(ss.wall_s, 5),
+                    stream_wall_s=round(sc.wall_s, 5),
+                    device_wall_s=round(ref.scan.wall_s, 5),
+                    **C.env_info(engine.mesh)))
+    return rows, records
+
+
+def write_stream_json(records, path=BENCH_STREAM_JSON):
+    payload = {"bench": "out_of_core_streaming", "created_at": time.time(),
+               "env": C.env_info(), "records": records}
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    return path
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--datasets", default="higgs")
+    ap.add_argument("--device-budget-bytes", type=int, default=None,
+                    help="force this device budget for the streaming "
+                         "section (default: dataset_bytes // 4)")
+    ap.add_argument("--stream-only", action="store_true",
+                    help="skip the classic section (the CI smoke)")
+    ap.add_argument("--stream-out", default=BENCH_STREAM_JSON)
     args = ap.parse_args()
     trees = C.FAST_TREE_GRID if args.fast else C.TREE_GRID
-    C.print_rows(run(datasets=tuple(args.datasets.split(",")),
-                     trees=trees, scale=args.scale))
+    datasets = tuple(args.datasets.split(","))
+    if not args.stream_only:
+        C.print_rows(run(datasets=datasets, trees=trees, scale=args.scale))
+    srows, records = run_stream(
+        datasets=datasets, trees=trees,
+        scale=min(args.scale, 0.25) if args.fast else args.scale,
+        device_budget_bytes=args.device_budget_bytes)
+    C.print_rows(srows, header=args.stream_only)
+    path = write_stream_json(records, args.stream_out)
+    print(f"# streaming trajectory -> {path}  (smoke OK: host tier "
+          f"executed out-of-core, parity held)")
 
 
 if __name__ == "__main__":

@@ -65,6 +65,19 @@ def main() -> None:
     C.print_rows(rows)
     summary += _summary(rows, "tab4-6")
 
+    print("\n## Out-of-core streaming scan: host tier + double-buffered DMA")
+    srows, stream_records = bench_large.run_stream(
+        trees=(trees[0],) if args.fast else trees[:2], scale=scale)
+    C.print_rows(srows)
+    stream_path = bench_large.write_stream_json(stream_records)
+    for r in stream_records:
+        summary.append(C.csv_line(
+            f"stream/{r['dataset']}/{r['plan']}/trees{r['trees']}",
+            r["stream_wall_s"],
+            f"overlap={r['overlap_fraction']} batches={r['batches']} "
+            f"budget={r['device_budget_bytes']}B"))
+    print(f"# streaming trajectory -> {stream_path}")
+
     from benchmarks import bench_wide_sparse
     print("\n## Tab7-9: wide/sparse datasets (bosch, epsilon, criteo)")
     rows = bench_wide_sparse.run(trees=trees, scale=scale)

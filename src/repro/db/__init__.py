@@ -1,1 +1,2 @@
-"""In-database layer: tensor-block store, external loaders, query plans."""
+"""In-database layer: tiered tensor-block store, external loaders,
+query plans, and the streaming scan executor (out-of-core paging)."""

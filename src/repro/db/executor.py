@@ -1,0 +1,244 @@
+"""Streaming scan executor: ONE batch loop for every plan and tier.
+
+The paper's headline scenario — in-database inference over datasets that
+dwarf the model — only works because netsDB STREAMS page-partitioned
+tensor blocks through the scan instead of requiring the whole table to be
+resident (Sec. 3.1/6).  Our analogue: the tensor-block store grew a HOST
+memory tier (``db/store.py``: page-aligned numpy blocks, spilled to
+automatically when an ingest exceeds ``device_budget_bytes``), and this
+module is the scan loop that pages those blocks through device memory.
+
+``StreamingScanExecutor`` replaces the hand-rolled per-batch loop that
+used to live inside ``ForestQueryEngine.infer``: every plan (udf / rel),
+every storage format (dense rows / CSR pages), and every tier (device /
+host) runs the SAME loop.  Sources implement the ``ScanSource`` protocol
+(``page_slice`` + ``to_device``), so nothing downstream ever branches on
+where the pages live.
+
+The loop is a double-buffered DMA pipeline (``prefetch_depth=2``):
+
+    batch i+1   pages in flight via async ``jax.device_put`` honoring the
+                store's ``data_sharding`` (host tier; a no-op view on the
+                device tier)
+    batch i     runs its (shard_map-wrapped or mesh-less) fused kernel
+                stages
+    batch i-1   predictions drain (``copy_to_host_async``) into a
+                preallocated host result buffer
+
+At most ``MAX_IN_FLIGHT = 2`` device page buffers exist at any moment —
+asserted on every acquire, and reported as ``ScanStats.max_in_flight``.
+
+The preallocated result buffer also retires the jax-0.4.37 concatenate
+workaround from the hot path: per-batch outputs are written into host
+memory slot by slot, so the eager ``jnp.concatenate`` over PARTIALLY
+replicated operands (which XLA:CPU miscompiles by summing replicas) never
+runs.  ``tests/test_streaming.py`` keeps a pinned reproduction of the
+miscompile so a future jax bump can delete the note entirely; the host
+gather used here (per-shard copy + stitch) is not affected.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Iterator, Protocol, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.db.operators import StageReport, run_stages
+
+__all__ = ["ScanSource", "ScanStats", "StreamingScanExecutor",
+           "MAX_IN_FLIGHT"]
+
+#: hard ceiling on simultaneously live device page buffers: the one being
+#: computed on plus the one in DMA flight.  The executor asserts it.
+MAX_IN_FLIGHT = 2
+
+#: default per-batch device footprint for HOST-tier scans when the store
+#: has no ``device_budget_bytes``: an explicit host ingest must still
+#: STREAM (a whole-dataset device_put would defeat the tier), so the
+#: query engine caps the default batch at this many bytes per in-flight
+#: buffer.
+DEFAULT_STREAM_BATCH_BYTES = 64 << 20
+
+
+@runtime_checkable
+class ScanSource(Protocol):
+    """What the executor needs from a stored dataset (any tier/format).
+
+    Both ``StoredDataset`` and ``SparseStoredDataset`` implement this
+    structurally — callers (the executor, the query engine) never branch
+    on ``tier`` or ``storage_format``; the source's own ``page_slice`` /
+    ``to_device`` encapsulate where pages live and how they reach the
+    device.
+    """
+
+    name: str
+    tier: str                        # "device" | "host"
+    num_rows: int                    # true N (pre-padding)
+
+    @property
+    def num_pages(self) -> int: ...
+
+    @property
+    def page_rows(self) -> int: ...
+
+    def page_slice(self, first_page: int, num_pages: int) -> Any:
+        """Contiguous page range in the source's OWN tier (device view or
+        host numpy view — views, not copies, on both tiers)."""
+        ...
+
+    def to_device(self, block: Any, sharding: Any = None) -> Any:
+        """Stage a block onto device(s).  Host tier: an (async)
+        ``jax.device_put`` honoring ``sharding``; device tier: identity
+        (the no-op transfer stage)."""
+        ...
+
+
+@dataclasses.dataclass
+class ScanStats:
+    """Per-query streaming telemetry (attached to ``QueryResult.scan``)."""
+
+    tier: str                        # source tier the scan ran against
+    batches: int                     # page batches executed
+    batch_pages: int                 # pages per (full) batch
+    prefetch_depth: int              # 1 = synchronous, 2 = double-buffered
+    max_in_flight: int = 0           # peak live device page buffers (<= 2)
+    bytes_streamed: int = 0          # host->device bytes actually shipped
+    transfer_issue_s: float = 0.0    # time spent ISSUING device_puts
+    transfer_wait_s: float = 0.0     # EXPOSED wait for pages to be ready
+    #                                  (what double-buffering hides)
+    compute_s: float = 0.0           # kernel-stage wall time
+    drain_s: float = 0.0             # device->host result-buffer writes
+    wall_s: float = 0.0              # whole scan loop
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One acquired batch: its page span + the (maybe mid-DMA) block."""
+
+    index: int
+    first_page: int
+    num_pages: int
+    block: Any
+
+
+def _block_nbytes(block) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(block)
+               if hasattr(x, "dtype"))
+
+
+class StreamingScanExecutor:
+    """Runs compiled plan stages over a ``ScanSource``, page batch by
+    page batch, with double-buffered host->device paging.
+
+    One instance per query execution; ``stages`` is the compiled stage
+    list (``db/operators.Stage``) whose final state carries the per-batch
+    predictions under ``result_key``.
+    """
+
+    def __init__(self, stages, *, sharding=None, prefetch_depth: int = 2,
+                 result_key: str = "pred"):
+        if not 1 <= prefetch_depth <= MAX_IN_FLIGHT:
+            raise ValueError(
+                f"prefetch_depth must be in [1, {MAX_IN_FLIGHT}], "
+                f"got {prefetch_depth}")
+        self.stages = stages
+        self.sharding = sharding          # store.data_sharding() (or None)
+        self.prefetch_depth = prefetch_depth
+        self.result_key = result_key
+
+    # -- batch plan ---------------------------------------------------------
+    @staticmethod
+    def batch_plan(num_pages: int, batch_pages: int
+                   ) -> Iterator[tuple[int, int, int]]:
+        """Deterministic (batch_index, first_page, num_pages) plan — the
+        F3 batching loop AND the replay unit: batch k always covers the
+        same pages, whatever tier they live on."""
+        for k, first in enumerate(range(0, num_pages, batch_pages)):
+            yield k, first, min(batch_pages, num_pages - first)
+
+    # -- execution ----------------------------------------------------------
+    def execute(self, source: ScanSource, batch_pages: int
+                ) -> tuple[np.ndarray, list[StageReport], ScanStats]:
+        """Stream every page batch of ``source`` through the stages.
+
+        Returns (predictions [num_rows] host f32, per-batch stage
+        reports, ScanStats).  Predictions land in a PREALLOCATED host
+        buffer slot by slot — no concatenate anywhere on the hot path.
+        """
+        R = source.page_rows
+        plan = list(self.batch_plan(source.num_pages, batch_pages))
+        stats = ScanStats(tier=source.tier, batches=len(plan),
+                          batch_pages=batch_pages,
+                          prefetch_depth=self.prefetch_depth)
+        reports: list[StageReport] = []
+        result: np.ndarray | None = None   # allocated at first drain
+        bufs: deque[_InFlight] = deque()   # acquired, not yet computed
+        drains: deque = deque()            # computed, not yet written out
+        live = 0                           # live device page buffers
+        next_i = 0
+        t_wall = time.perf_counter()
+
+        def acquire():
+            nonlocal live, next_i
+            k, first, n = plan[next_i]
+            next_i += 1
+            block = source.page_slice(first, n)
+            t0 = time.perf_counter()
+            block = source.to_device(block, self.sharding)  # async DMA
+            stats.transfer_issue_s += time.perf_counter() - t0
+            if source.tier == "host":
+                stats.bytes_streamed += _block_nbytes(block)
+            live += 1
+            stats.max_in_flight = max(stats.max_in_flight, live)
+            assert live <= MAX_IN_FLIGHT, \
+                f"{live} device page buffers in flight (max {MAX_IN_FLIGHT})"
+            bufs.append(_InFlight(k, first, n, block))
+
+        def drain(keep: int):
+            nonlocal result
+            while len(drains) > keep:
+                first, n, pred = drains.popleft()
+                t0 = time.perf_counter()
+                host = np.asarray(pred)       # per-shard copy + stitch
+                if result is None:
+                    result = np.empty(source.num_pages * R, host.dtype)
+                result[first * R:(first + n) * R] = host.reshape(-1)
+                stats.drain_s += time.perf_counter() - t0
+
+        while next_i < len(plan) or bufs:
+            if not bufs:
+                acquire()
+            cur = bufs.popleft()
+            # batch i+1: issue its page DMA while batch i computes
+            while len(bufs) + 1 < self.prefetch_depth and next_i < len(plan):
+                acquire()
+            # batch i-1: drain while batch i's pages finish their DMA
+            drain(keep=0)
+            t0 = time.perf_counter()
+            jax.block_until_ready(cur.block)
+            stats.transfer_wait_s += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            state, reps = run_stages(self.stages, {"x": cur.block})
+            stats.compute_s += time.perf_counter() - t0
+            reports.extend(reps)
+            pred = state[self.result_key]
+            if hasattr(pred, "copy_to_host_async"):
+                pred.copy_to_host_async()     # overlap with the next batch
+            drains.append((cur.first_page, cur.num_pages, pred))
+            # release the page buffer NOW: some plans thread "x" through
+            # to the final stage output, so dropping `state` (not just
+            # cur.block) is what actually frees the device pages — else a
+            # third buffer would be alive during the next prefetch
+            state = None
+            cur.block = None                  # at most 2 ever live
+            live -= 1
+        drain(keep=0)
+
+        stats.wall_s = time.perf_counter() - t_wall
+        assert result is not None, "scan produced no batches"
+        return result[: source.num_rows], reports, stats

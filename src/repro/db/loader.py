@@ -177,7 +177,8 @@ def load_libsvm_external(path: str, num_features: int, *, device=None,
 
 
 def load_libsvm_csr_external(path: str, num_features: int, *,
-                             page_rows: int = 512, pages_multiple: int = 1):
+                             page_rows: int = 512, pages_multiple: int = 1,
+                             tier: str = "device"):
     """Timed sparse load, SPARSE data plane: parse -> CSR pages -> transfer.
 
     Never materializes [N, F] on the host: parse builds host CSR lists,
@@ -189,10 +190,18 @@ def load_libsvm_csr_external(path: str, num_features: int, *,
     sparse-storage claim is about.  Same LoadTiming contract as every
     other external loader.
 
-    Returns (CSRPages device-resident, labels [N] np, LoadTiming).
+    ``tier="host"`` skips the device transfer entirely (``transfer_s``
+    records 0): criteo-scale files parse straight into page-aligned host
+    CSR blocks, ready for ``store.put_sparse(pages=..., tier="host")``
+    and the streaming scan executor — the out-of-core ingest path, with
+    no device round-trip at load time.
+
+    Returns (CSRPages on ``tier``, labels [N] np, LoadTiming).
     """
     from repro.db.sparse import CSRPages, paginate_csr
 
+    if tier not in ("device", "host"):
+        raise ValueError(f"unknown tier {tier!r}")
     t0 = time.perf_counter()
     indptr, indices, values, labels = _parse_libsvm(path)
     t1 = time.perf_counter()
@@ -202,10 +211,15 @@ def load_libsvm_csr_external(path: str, num_features: int, *,
         page_rows=page_rows, n_features=num_features,
         pages_multiple=pages_multiple)
     t2 = time.perf_counter()
-    pages = CSRPages(indptr=jnp.asarray(ip), indices=jnp.asarray(ix),
-                     values=jnp.asarray(vl), n_features=int(num_features))
-    jax.block_until_ready((pages.indptr, pages.indices, pages.values))
-    t3 = time.perf_counter()
+    if tier == "host":
+        pages = CSRPages(indptr=ip, indices=ix, values=vl,
+                         n_features=int(num_features))
+        t3 = t2               # no device transfer: transfer_s == 0
+    else:
+        pages = CSRPages(indptr=jnp.asarray(ip), indices=jnp.asarray(ix),
+                         values=jnp.asarray(vl), n_features=int(num_features))
+        jax.block_until_ready((pages.indptr, pages.indices, pages.values))
+        t3 = time.perf_counter()
     timing = LoadTiming(parse_s=t1 - t0, convert_s=t2 - t1,
                         transfer_s=t3 - t2, total_s=t3 - t0)
     return pages, np.asarray(labels, np.float32), timing

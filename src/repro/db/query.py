@@ -57,6 +57,17 @@ partials sequentially in partition order — the same association XLA:CPU's
 all-reduce uses, which is what makes mesh and mesh-less fused predictions
 bit-identical in f32.
 
+Streaming scan execution: the per-batch loop lives in ONE place — the
+``StreamingScanExecutor`` (``db/executor.py``).  Every plan (udf / rel),
+storage format (dense / CSR), and memory tier (device-resident / host
+out-of-core) runs the same double-buffered loop: batch *i+1*'s pages are
+in DMA flight (async ``device_put`` under the store's ``data_sharding``)
+while batch *i* runs its kernel stages and batch *i−1*'s predictions
+drain into a preallocated host result buffer.  Device-tier datasets take
+the identical loop with a no-op transfer stage.  The result buffer also
+retired the jax-0.4.37 partially-replicated-concatenate workaround from
+the hot path (pinned reproduction in ``tests/test_streaming.py``).
+
 Each stage is timed and its materialized bytes recorded, reproducing the
 paper's latency breakdowns.
 """
@@ -73,7 +84,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core import algorithms as algs
 from repro.core import postprocess as post
@@ -82,7 +93,9 @@ from repro.core.forest import (Forest, compact_forest, hb_path_matrix,
 from repro.core.reuse import (GLOBAL_CACHE, GLOBAL_PLAN_CACHE,
                               MaterializedModel, ModelReuseCache,
                               fingerprint_forest, mesh_signature)
-from repro.db.operators import (Operator, StageReport, ndevices, run_stages,
+from repro.db.executor import (DEFAULT_STREAM_BATCH_BYTES, ScanStats,
+                               StreamingScanExecutor)
+from repro.db.operators import (Operator, StageReport, ndevices,
                                 split_into_stages)
 from repro.db.store import TensorBlockStore
 from repro.dist.sharding import ForestShardingPlan, make_forest_plan
@@ -110,6 +123,8 @@ class QueryResult:
     n_parts: int = 1                  # tree partitions (rel plans; mesh =
     #                                   model-axis size, else heuristic)
     mesh_devices: int = 1             # devices the query executed across
+    tier: str = "device"              # memory tier the scan read from
+    scan: ScanStats | None = None     # streaming-executor telemetry
 
     def breakdown(self) -> dict[str, float]:
         return {
@@ -179,6 +194,8 @@ class ForestQueryEngine:
                            else GLOBAL_PLAN_CACHE)
         # id -> content fingerprint, invalidated when the Forest is GC'd
         self._fingerprints: dict[int, str] = {}
+        # store.drop sweeps this engine's dataset-dependent plan entries
+        store.register_invalidator(self.invalidate_dataset)
 
     # ------------------------------------------------------------------
     # cache-key components
@@ -211,6 +228,14 @@ class ForestQueryEngine:
         n = self.cache.invalidate(model_id)
         n += self.plan_cache.invalidate(model_id, key_index=1)
         return n
+
+    def invalidate_dataset(self, dataset: str) -> int:
+        """``TensorBlockStore.drop``'s hook: sweep compiled plans built
+        against ``dataset`` (plan keys carry the dataset name at
+        ``key[2]``).  Model materializations are dataset-independent and
+        survive — only the plan executables, whose batch signatures came
+        from the dropped dataset, are stale.  Returns entries dropped."""
+        return self.plan_cache.invalidate(dataset, key_index=2)
 
     # ------------------------------------------------------------------
     # sparse prepass (the wide-sparse data plane's plan-build half)
@@ -481,19 +506,39 @@ class ForestQueryEngine:
         write_as: str | None = None,
         model_id: str | None = None,
         n_parts: int | None = None,
+        prefetch_depth: int = 2,
     ) -> QueryResult:
         """Run the end-to-end inference query (paper's measured pipeline).
 
         ``n_parts`` overrides the rel plans' tree-partition count on the
         MESH-LESS path (default: one partition per kernel tree block); a
         model mesh fixes the count to its ``model``-axis size.
+        ``prefetch_depth`` controls the streaming executor: 2 (default)
+        double-buffers page DMA against compute, 1 runs the synchronous
+        reference pipeline (the benchmarks' overlap baseline).
         """
         if plan not in ("udf", "rel", "rel+reuse"):
             raise ValueError(f"unknown plan {plan!r}")
         ds = self.store.get(dataset)
         fmt = getattr(ds, "storage_format", "dense")
+        tier = getattr(ds, "tier", "device")
         t_query0 = time.perf_counter()
-        batch_pages = batch_pages or ds.num_pages
+        if batch_pages is None:
+            batch_pages = ds.num_pages
+            if tier == "host":
+                # out-of-core default: a batch is half the device budget
+                # (two in-flight page buffers together fit it), or a
+                # fixed footprint when no budget is set — an explicit
+                # host ingest must still stream, never whole-dataset
+                # device_put.  Sized in data-axis units, rounding DOWN,
+                # so the mesh divisibility round-up below cannot push
+                # the pair past the budget (floor: one page per device).
+                budget = self.store.device_budget_bytes
+                target = budget // 2 if budget else DEFAULT_STREAM_BATCH_BYTES
+                unit = max(1, self.fplan.n_data)
+                fit = target // max(ds.page_nbytes, 1)
+                batch_pages = min(ds.num_pages,
+                                  max(unit, fit // unit * unit))
         if self.fplan.n_data > 1:
             # shard_map needs page batches that divide evenly over the
             # data axis; num_pages itself is a data-axis multiple (the
@@ -519,9 +564,14 @@ class ForestQueryEngine:
         plan_hit = False
         prefix_reports: list[StageReport] = []
 
+        # plan keys carry the model id at key[1] (engine.invalidate) and
+        # the DATASET NAME at key[2] (store.drop -> invalidate_dataset:
+        # a dropped dataset must not leave compiled plans keyed on its
+        # batch signature resident)
         if plan == "udf":
             mid = self._model_key(forest, model_id)
-            pkey = ("udf-plan", mid, algorithm, fmt, batch_sig, mesh_id)
+            pkey = ("udf-plan", mid, dataset, algorithm, fmt, batch_sig,
+                    mesh_id)
 
             def build_udf() -> CompiledQueryPlan:
                 f, sparse_aux = forest, None
@@ -574,7 +624,7 @@ class ForestQueryEngine:
                 # pinned for the entry's lifetime — the stage closures
                 # alone only capture mat.forest, which would let the
                 # wrapper be freed and its id reused
-                pkey = ("rel-plan", mid, algorithm, n_parts, fmt,
+                pkey = ("rel-plan", mid, dataset, algorithm, n_parts, fmt,
                         batch_sig, mesh_id, id(mat))
 
                 def build_rel() -> CompiledQueryPlan:
@@ -594,27 +644,20 @@ class ForestQueryEngine:
                                           num_stages=len(stages) + 1)
 
         reuse_hit = model_hit or plan_hit
-        stages = qplan.stages
 
-        # F3 batching: iterate page batches; deterministic batch->pages map.
-        preds = []
-        reports: list[StageReport] = list(prefix_reports)
-        for _, block in ds.batches(batch_pages):
-            state = {"x": block}
-            state, reps = run_stages(stages, state)
-            preds.append(state["pred"])
-            reports.extend(reps)
-        if len(preds) > 1 and self.mesh is not None and \
-                len(self.mesh.axis_names) > 1:
-            # jax 0.4.37 XLA:CPU miscompiles eager concatenate of
-            # PARTIALLY replicated operands (replica values are summed,
-            # e.g. a P('data')-sharded [B] on a (data, model) mesh comes
-            # out n_model times too large).  Fully replicating each batch
-            # output first sidesteps it — [B] floats, negligible next to
-            # the blocks themselves.
-            rep = NamedSharding(self.mesh, P())
-            preds = [jax.device_put(p, rep) for p in preds]
-        predictions = jnp.concatenate(preds)[: ds.num_rows]
+        # F3 batching through the streaming scan executor: ONE loop for
+        # every plan/format/tier.  Host-tier pages double-buffer their
+        # DMA against the kernel stages; device-tier datasets take the
+        # no-op transfer stage.  Per-batch predictions land in the
+        # executor's preallocated host buffer — no concatenate (and no
+        # jax-0.4.37 partially-replicated-concatenate workaround) on the
+        # hot path.
+        executor = StreamingScanExecutor(qplan.stages,
+                                         sharding=self.store.data_sharding(),
+                                         prefetch_depth=prefetch_depth)
+        out_np, batch_reports, scan = executor.execute(ds, batch_pages)
+        reports: list[StageReport] = list(prefix_reports) + batch_reports
+        predictions = jnp.asarray(out_np)
 
         write_s = 0.0
         if write_as is not None:
@@ -649,4 +692,6 @@ class ForestQueryEngine:
             storage_format=fmt,
             n_parts=n_parts,
             mesh_devices=(self.mesh.size if self.mesh is not None else 1),
+            tier=tier,
+            scan=scan,
         )

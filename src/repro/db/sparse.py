@@ -52,18 +52,27 @@ LANE = 128
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class CSRPages:
-    """Device-resident CSR page block (a whole dataset or a batch slice).
+    """CSR page block (a whole dataset or a batch slice), device or host.
 
     A registered pytree: jitted stage functions take it as an input like
     any dense block, and a contiguous page range is a ``dynamic_slice``
-    along axis 0 of all three arrays (same page granularity as
-    ``StoredDataset.page_slice``).
+    (device tier) or numpy view (host tier) along axis 0 of all three
+    arrays (same page granularity as ``StoredDataset.page_slice``).
+    Because it is a pytree, one ``jax.device_put`` stages a host-tier
+    block onto the mesh — the streaming executor's sparse DMA path.
     """
 
     indptr: jax.Array                 # [P, R+1] int32, page-local offsets
     indices: jax.Array                # [P, C] int32, pad entries = n_features
     values: jax.Array                 # [P, C] f32
     n_features: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def tier(self) -> str:
+        """Where the page arrays live: host-tier pages are plain numpy
+        (the out-of-core store keeps them page-aligned on the host and
+        the streaming executor DMAs batch ranges to device)."""
+        return "host" if isinstance(self.indptr, np.ndarray) else "device"
 
     @property
     def num_pages(self) -> int:
@@ -87,11 +96,14 @@ class CSRPages:
                    for a in (self.indptr, self.indices, self.values))
 
     def page_slice(self, first_page: int, num_pages: int) -> "CSRPages":
-        """Contiguous page range (device view), same contract as the
-        dense store's page_slice: page p of batch k is always the same
-        rows AND the same block shape."""
-        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, first_page,
-                                                    num_pages, axis=0)
+        """Contiguous page range (a view in the pages' own tier), same
+        contract as the dense store's page_slice: page p of batch k is
+        always the same rows AND the same block shape."""
+        if self.tier == "host":
+            sl = lambda a: a[first_page:first_page + num_pages]
+        else:
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, first_page,
+                                                        num_pages, axis=0)
         return dataclasses.replace(self, indptr=sl(self.indptr),
                                    indices=sl(self.indices),
                                    values=sl(self.values))

@@ -1,14 +1,13 @@
-"""The tensor-block store: netsDB's native storage, TPU-resident.
+"""The tensor-block store: netsDB's native storage, tiered.
 
 Paper Sec. 3.1: "the input samples are stored as a collection of tensor
 blocks, called sample blocks. Each block is a 2D tensor that represents a
 vector of feature vectors."  Our mapping (DESIGN.md Sec. 3): a stored dataset
-is ONE device-resident array [N, F] laid out as ``page_rows``-row pages,
-sharded over the mesh ``data`` axis (and replicated over ``model``), plus a
-catalog entry.  "In-database inference" = the query plan consumes these
-device buffers directly; the external path (db/loader.py) must parse +
-convert + transfer through the host first — exactly the boundary whose cost
-the paper measures.
+is ONE array [N, F] laid out as ``page_rows``-row pages, sharded over the
+mesh ``data`` axis (and replicated over ``model``), plus a catalog entry.
+"In-database inference" = the query plan consumes these buffers directly;
+the external path (db/loader.py) must parse + convert + transfer through
+the host first — exactly the boundary whose cost the paper measures.
 
 Pages are the batching unit (paper F3): a batch is a contiguous page range,
 and the page↔step mapping is deterministic (page p of batch k is always the
@@ -20,13 +19,32 @@ Storage formats: the catalog tags every dataset with a ``storage_format``.
 determinism, consumed through the feature-gather prepass instead of being
 densified at full F).  Query plans key their compiled-plan cache on the
 format, so a dense and a CSR plan over the same model never collide.
+
+Memory tiers: every dataset also lives on exactly one TIER.
+
+  ``device``  the original layout — device-resident jax arrays, consumed
+              by kernels with zero staging (dataset size capped by HBM);
+  ``host``    page-aligned host numpy blocks — the out-of-core tier.  The
+              streaming scan executor (``db/executor.py``) pages a host
+              dataset through device memory batch by batch, double
+              buffered, so datasets far larger than device memory execute.
+
+``put(..., tier=...)`` / ``put_sparse(..., tier=...)`` accept an explicit
+tier or ``"auto"``: with a ``device_budget_bytes`` knob set on the store,
+an ingest that would push the device-resident total past the budget spills
+to the host tier automatically.  Catalog entries carry the tier, and the
+store accounts ``nbytes`` PER TIER (``device_nbytes`` / ``host_nbytes``).
+Both dataset classes implement the executor's ``ScanSource`` protocol
+(``page_slice`` in their own tier + ``to_device`` staging), so no caller
+ever branches on where pages live.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Iterator
+import weakref
+from typing import Any, Callable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -37,17 +55,28 @@ from repro.db.sparse import CSRPages, csr_from_dense, paginate_csr
 
 __all__ = ["StoredDataset", "SparseStoredDataset", "TensorBlockStore"]
 
+TIERS = ("device", "host")
+
+
+def _check_tier(tier: str) -> str:
+    if tier not in TIERS:
+        raise ValueError(f"unknown tier {tier!r}; expected one of {TIERS}")
+    return tier
+
 
 @dataclasses.dataclass
 class StoredDataset:
     name: str
-    data: jax.Array               # [N_padded, F] device-resident, row-sharded
+    data: Any                     # [N_padded, F]: jax.Array (device tier,
+    #                               row-sharded) or np.ndarray (host tier,
+    #                               page-aligned pages)
     num_rows: int                 # true N (pre-padding)
     page_rows: int
     labels: jax.Array | None = None
     task: str = "classification"
     created_at: float = dataclasses.field(default_factory=time.time)
     storage_format: str = "dense"
+    tier: str = "device"
 
     @property
     def num_features(self) -> int:
@@ -61,13 +90,28 @@ class StoredDataset:
     def nbytes(self) -> int:
         return self.data.size * self.data.dtype.itemsize
 
-    def page_slice(self, first_page: int, num_pages: int) -> jax.Array:
-        """[num_pages * page_rows, F] contiguous page range (device view)."""
+    @property
+    def page_nbytes(self) -> int:
+        """Bytes of ONE page — the unit the streaming executor budgets."""
+        return self.nbytes // max(self.num_pages, 1)
+
+    def page_slice(self, first_page: int, num_pages: int):
+        """[num_pages * page_rows, F] contiguous page range, a VIEW in the
+        dataset's own tier (device slice / host numpy view)."""
         lo = first_page * self.page_rows
+        if self.tier == "host":
+            return self.data[lo: lo + num_pages * self.page_rows]
         return jax.lax.dynamic_slice_in_dim(
             self.data, lo, num_pages * self.page_rows, axis=0)
 
-    def batches(self, pages_per_batch: int) -> Iterator[tuple[int, jax.Array]]:
+    def to_device(self, block, sharding=None):
+        """ScanSource staging: host tier issues an (async) device_put
+        honoring the store's data sharding; device tier is a no-op."""
+        if self.tier == "device":
+            return block
+        return jax.device_put(block, sharding)
+
+    def batches(self, pages_per_batch: int) -> Iterator[tuple[int, Any]]:
         """Deterministic (batch_index, block) iteration — the F3 batching
         loop AND the replay unit: batch k always covers the same pages."""
         for k, first in enumerate(range(0, self.num_pages, pages_per_batch)):
@@ -82,16 +126,19 @@ class SparseStoredDataset:
     Same page↔batch determinism (a batch is a contiguous page range and
     every page block has one fixed shape), but rows live compressed —
     pages beyond ``num_rows`` are EMPTY rows (every feature missing),
-    mirroring the dense store's NaN padding rows.
+    mirroring the dense store's NaN padding rows.  On the host tier the
+    three page arrays are numpy; ``to_device`` ships all three under the
+    store's data sharding (a CSRPages pytree is one ``device_put``).
     """
 
     name: str
-    pages: CSRPages                # device-resident CSR page blocks
+    pages: CSRPages                # CSR page blocks (device or host arrays)
     num_rows: int                  # true N (pre-padding)
     labels: jax.Array | None = None
     task: str = "classification"
     created_at: float = dataclasses.field(default_factory=time.time)
     storage_format: str = "csr"
+    tier: str = "device"
 
     @property
     def num_features(self) -> int:
@@ -110,12 +157,21 @@ class SparseStoredDataset:
         return self.pages.nbytes
 
     @property
+    def page_nbytes(self) -> int:
+        return self.nbytes // max(self.num_pages, 1)
+
+    @property
     def nnz(self) -> int:
         """True stored-entry count (excludes capacity padding)."""
-        return int(jnp.sum(self.pages.indptr[:, -1]))
+        return int(np.sum(np.asarray(self.pages.indptr[:, -1])))
 
     def page_slice(self, first_page: int, num_pages: int) -> CSRPages:
         return self.pages.page_slice(first_page, num_pages)
+
+    def to_device(self, block: CSRPages, sharding=None) -> CSRPages:
+        if self.tier == "device":
+            return block
+        return jax.device_put(block, sharding)
 
     def batches(self, pages_per_batch: int) -> Iterator[tuple[int, CSRPages]]:
         """Deterministic (batch_index, CSR block) iteration — identical
@@ -126,12 +182,25 @@ class SparseStoredDataset:
 
 
 class TensorBlockStore:
-    """Catalog of device-resident datasets (one store per pod; DESIGN §8)."""
+    """Catalog of tiered datasets (one store per pod; DESIGN §8).
 
-    def __init__(self, mesh: Mesh | None = None, *, default_page_rows: int = 1024):
+    ``device_budget_bytes``: soft cap on device-resident dataset bytes.
+    ``tier="auto"`` ingests that would exceed it spill to the host tier,
+    where the streaming scan executor pages them through device memory.
+    """
+
+    def __init__(self, mesh: Mesh | None = None, *,
+                 default_page_rows: int = 1024,
+                 device_budget_bytes: int | None = None):
         self.mesh = mesh
         self.default_page_rows = default_page_rows
-        self._datasets: dict[str, StoredDataset] = {}
+        self.device_budget_bytes = device_budget_bytes
+        self._datasets: dict[str, StoredDataset | SparseStoredDataset] = {}
+        # drop-invalidation hooks: engines register their
+        # invalidate_dataset so dropping a dataset sweeps the compiled
+        # plans built against it (weakrefs — a dead engine unregisters
+        # itself by getting collected)
+        self._invalidators: list[weakref.ref] = []
 
     # -- mesh contract ------------------------------------------------------
     @property
@@ -146,10 +215,33 @@ class TensorBlockStore:
     def data_sharding(self) -> NamedSharding | None:
         """Row/page sharding for stored blocks: dim 0 over ``data``,
         replicated over ``model`` (None off-mesh).  One definition for
-        dense pages, CSR page arrays, and result writes."""
+        dense pages, CSR page arrays, result writes, AND the streaming
+        executor's host->device page transfers."""
         if self.mesh is not None and "data" in self.mesh.axis_names:
             return NamedSharding(self.mesh, P("data", None))
         return None
+
+    # -- tier accounting ----------------------------------------------------
+    @property
+    def device_nbytes(self) -> int:
+        return sum(d.nbytes for d in self._datasets.values()
+                   if d.tier == "device")
+
+    @property
+    def host_nbytes(self) -> int:
+        return sum(d.nbytes for d in self._datasets.values()
+                   if d.tier == "host")
+
+    def _resolve_tier(self, tier: str, ingest_nbytes: int) -> str:
+        """``auto`` spills to host when the ingest would push the
+        device-resident total past ``device_budget_bytes``."""
+        if tier != "auto":
+            return _check_tier(tier)
+        if (self.device_budget_bytes is not None
+                and self.device_nbytes + ingest_nbytes
+                > self.device_budget_bytes):
+            return "host"
+        return "device"
 
     # -- ingestion ----------------------------------------------------------
     def put(
@@ -161,9 +253,11 @@ class TensorBlockStore:
         page_rows: int | None = None,
         task: str = "classification",
         dtype=jnp.float32,
+        tier: str = "auto",
     ) -> StoredDataset:
         """Ingest [N, F] rows: pad to whole pages (NaN rows — never counted
-        in results), shard rows over the mesh ``data`` axis, register."""
+        in results), resolve the tier, lay out (device: shard rows over the
+        mesh ``data`` axis; host: keep page-aligned numpy), register."""
         page_rows = page_rows or self.default_page_rows
         arr = np.asarray(jax.device_get(data))
         n = arr.shape[0]
@@ -173,15 +267,21 @@ class TensorBlockStore:
         if pad:
             arr = np.concatenate(
                 [arr, np.full((pad, arr.shape[1]), np.nan, arr.dtype)])
-        dev = jnp.asarray(arr, dtype)
-        sharding = self.data_sharding()
-        if sharding is not None:
-            dev = jax.device_put(dev, sharding)
+        np_dtype = np.dtype(dtype)
+        tier = self._resolve_tier(tier, arr.size * np_dtype.itemsize)
+        if tier == "host":
+            stored = np.ascontiguousarray(arr, np_dtype)
+        else:
+            stored = jnp.asarray(arr, dtype)
+            sharding = self.data_sharding()
+            if sharding is not None:
+                stored = jax.device_put(stored, sharding)
         lab = None
         if labels is not None:
             lab = jnp.asarray(np.asarray(labels), jnp.float32)
-        ds = StoredDataset(name=name, data=dev, num_rows=n,
-                           page_rows=page_rows, labels=lab, task=task)
+        ds = StoredDataset(name=name, data=stored, num_rows=n,
+                           page_rows=page_rows, labels=lab, task=task,
+                           tier=tier)
         self._datasets[name] = ds
         return ds
 
@@ -198,13 +298,15 @@ class TensorBlockStore:
         page_rows: int | None = None,
         task: str = "classification",
         drop_zeros: bool = False,
+        tier: str = "auto",
     ) -> SparseStoredDataset:
         """Ingest a CSR dataset (the sparse data plane).
 
         Three entry points, most-compressed first:
-          * ``pages`` — already-paginated device CSRPages (the LIBSVM→CSR
-            loader hands these over; zero extra host work, the in-database
-            boundary the paper measures against);
+          * ``pages`` — already-paginated CSRPages, device or host arrays
+            (the LIBSVM→CSR loader hands these over; with ``tier="host"``
+            a host-paged loader result is registered with ZERO device
+            work — criteo-scale files never round-trip the device);
           * ``csr`` — host (indptr [N+1], indices, values) triple;
           * ``data`` — dense-with-NaN host rows (NaN = missing; explicit
             zeros kept unless ``drop_zeros``), converted here.
@@ -216,8 +318,30 @@ class TensorBlockStore:
         pages_multiple = self.data_axis_size
 
         if pages is not None:
+            # already-paginated pages: never round-trip through the host
+            # (a device-tier handoff stays on device; only a tier
+            # MISMATCH migrates)
             if num_rows is None:
                 raise ValueError("num_rows is required with pages=")
+            num_features = pages.n_features
+            tier = self._resolve_tier(tier, pages.nbytes)
+            if tier == "host":
+                if pages.tier != "host":
+                    pages = CSRPages(
+                        indptr=np.asarray(jax.device_get(pages.indptr)),
+                        indices=np.asarray(jax.device_get(pages.indices)),
+                        values=np.asarray(jax.device_get(pages.values)),
+                        n_features=int(num_features))
+                stored = pages
+            else:
+                # jnp.asarray is a no-op on arrays already on device
+                stored = CSRPages(indptr=jnp.asarray(pages.indptr),
+                                  indices=jnp.asarray(pages.indices),
+                                  values=jnp.asarray(pages.values),
+                                  n_features=int(num_features))
+                sharding = self.data_sharding()
+                if sharding is not None:
+                    stored = jax.device_put(stored, sharding)
         else:
             if csr is None:
                 if data is None:
@@ -233,21 +357,25 @@ class TensorBlockStore:
                                       num_rows=num_rows, page_rows=page_rows,
                                       n_features=num_features,
                                       pages_multiple=pages_multiple)
-            pages = CSRPages(indptr=jnp.asarray(ip), indices=jnp.asarray(ix),
-                             values=jnp.asarray(vl),
-                             n_features=int(num_features))
-        sharding = self.data_sharding()
-        if sharding is not None:
-            pages = dataclasses.replace(
-                pages,
-                indptr=jax.device_put(pages.indptr, sharding),
-                indices=jax.device_put(pages.indices, sharding),
-                values=jax.device_put(pages.values, sharding))
+            nbytes = sum(a.size * a.dtype.itemsize for a in (ip, ix, vl))
+            tier = self._resolve_tier(tier, nbytes)
+            if tier == "host":
+                stored = CSRPages(indptr=ip, indices=ix, values=vl,
+                                  n_features=int(num_features))
+            else:
+                stored = CSRPages(indptr=jnp.asarray(ip),
+                                  indices=jnp.asarray(ix),
+                                  values=jnp.asarray(vl),
+                                  n_features=int(num_features))
+                sharding = self.data_sharding()
+                if sharding is not None:
+                    stored = jax.device_put(stored, sharding)
         lab = None
         if labels is not None:
             lab = jnp.asarray(np.asarray(labels), jnp.float32)
-        ds = SparseStoredDataset(name=name, pages=pages, num_rows=int(num_rows),
-                                 labels=lab, task=task)
+        ds = SparseStoredDataset(name=name, pages=stored,
+                                 num_rows=int(num_rows),
+                                 labels=lab, task=task, tier=tier)
         self._datasets[name] = ds
         return ds
 
@@ -259,6 +387,44 @@ class TensorBlockStore:
         self._datasets[name] = ds
         return ds
 
+    # -- tier migration -----------------------------------------------------
+    def move(self, name: str, tier: str):
+        """Migrate a dataset between tiers (eviction: device -> host;
+        promotion: host -> device).  Page layout is preserved exactly, so
+        the page↔batch mapping — and therefore every prediction — is
+        unchanged; compiled plans stay valid (tier is a runtime property
+        of the scan, not of the plan)."""
+        _check_tier(tier)
+        ds = self.get(name)
+        if ds.tier == tier:
+            return ds
+        sharding = self.data_sharding()
+        if ds.storage_format == "csr":
+            if tier == "host":
+                pages = CSRPages(
+                    indptr=np.asarray(jax.device_get(ds.pages.indptr)),
+                    indices=np.asarray(jax.device_get(ds.pages.indices)),
+                    values=np.asarray(jax.device_get(ds.pages.values)),
+                    n_features=ds.pages.n_features)
+            else:
+                pages = CSRPages(indptr=jnp.asarray(ds.pages.indptr),
+                                 indices=jnp.asarray(ds.pages.indices),
+                                 values=jnp.asarray(ds.pages.values),
+                                 n_features=ds.pages.n_features)
+                if sharding is not None:
+                    pages = jax.device_put(pages, sharding)
+            new = dataclasses.replace(ds, pages=pages, tier=tier)
+        else:
+            if tier == "host":
+                data = np.asarray(jax.device_get(ds.data))
+            else:
+                data = jnp.asarray(ds.data)
+                if sharding is not None:
+                    data = jax.device_put(data, sharding)
+            new = dataclasses.replace(ds, data=data, tier=tier)
+        self._datasets[name] = new
+        return new
+
     # -- catalog --------------------------------------------------------------
     def get(self, name: str) -> StoredDataset:
         try:
@@ -267,8 +433,30 @@ class TensorBlockStore:
             raise KeyError(f"dataset {name!r} not in store; "
                            f"have {sorted(self._datasets)}")
 
-    def drop(self, name: str) -> None:
-        self._datasets.pop(name, None)
+    def register_invalidator(self, fn: Callable[[str], int]) -> None:
+        """Register a per-dataset invalidation hook (weakly).  Engines
+        register ``invalidate_dataset`` so ``drop`` sweeps the compiled
+        plans whose keys carry the dropped dataset's name."""
+        ref = weakref.WeakMethod(fn) if hasattr(fn, "__self__") \
+            else weakref.ref(fn)
+        self._invalidators.append(ref)
+
+    def drop(self, name: str) -> int:
+        """Drop a dataset AND invalidate dependent engine cache entries
+        (compiled plans close over batch signatures derived from the
+        dataset — leaving them resident after a drop pins device buffers
+        and serves entries for data that no longer exists).  Returns the
+        number of cache entries invalidated across registered engines."""
+        existed = self._datasets.pop(name, None)
+        invalidated = 0
+        if existed is not None:
+            for ref in list(self._invalidators):
+                fn = ref()
+                if fn is None:
+                    self._invalidators.remove(ref)
+                else:
+                    invalidated += int(fn(name) or 0)
+        return invalidated
 
     def __contains__(self, name: str) -> bool:
         return name in self._datasets
@@ -279,7 +467,8 @@ class TensorBlockStore:
             entry = dict(rows=d.num_rows, features=d.num_features,
                          pages=d.num_pages, page_rows=d.page_rows,
                          bytes=d.nbytes, task=d.task,
-                         format=getattr(d, "storage_format", "dense"))
+                         format=getattr(d, "storage_format", "dense"),
+                         tier=getattr(d, "tier", "device"))
             if entry["format"] == "csr":
                 entry["nnz"] = d.nnz
             out[n] = entry
