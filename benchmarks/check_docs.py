@@ -1,0 +1,67 @@
+"""Docs-consistency check: every BENCH_*.json key must be documented.
+
+``docs/benchmarks.md`` is the contract for reading the benchmark
+trajectory files.  This check walks every ``BENCH_*.json`` at the repo
+root, collects EVERY dict key that occurs anywhere in the payload
+(top-level, ``env``, and per-record fields alike), and fails if any key
+is not mentioned — in backticks — in ``docs/benchmarks.md``.  CI runs it
+right after the streaming smoke regenerates ``BENCH_stream.json``, so a
+new benchmark field cannot land without its documentation.
+
+Stdlib only (CI runs it before any heavyweight imports are warm):
+
+    python benchmarks/check_docs.py
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC = ROOT / "docs" / "benchmarks.md"
+
+
+def collect_keys(payload) -> set[str]:
+    """Every dict key anywhere in the (nested) JSON payload."""
+    keys: set[str] = set()
+
+    def walk(obj):
+        if isinstance(obj, dict):
+            for k, v in obj.items():
+                keys.add(k)
+                walk(v)
+        elif isinstance(obj, list):
+            for v in obj:
+                walk(v)
+
+    walk(payload)
+    return keys
+
+
+def main() -> int:
+    if not DOC.exists():
+        print(f"FAIL: {DOC.relative_to(ROOT)} does not exist")
+        return 1
+    documented = set(re.findall(r"`([A-Za-z0-9_.]+)`", DOC.read_text()))
+    bench_files = sorted(ROOT.glob("BENCH_*.json"))
+    if not bench_files:
+        print("FAIL: no BENCH_*.json files found to check")
+        return 1
+    failed = False
+    for path in bench_files:
+        keys = collect_keys(json.loads(path.read_text()))
+        missing = sorted(keys - documented)
+        if missing:
+            failed = True
+            print(f"FAIL {path.name}: keys missing from "
+                  f"docs/benchmarks.md: {', '.join(missing)}")
+        else:
+            print(f"OK   {path.name}: all {len(keys)} keys documented")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,22 +11,41 @@ module is the scan loop that pages those blocks through device memory.
 ``StreamingScanExecutor`` replaces the hand-rolled per-batch loop that
 used to live inside ``ForestQueryEngine.infer``: every plan (udf / rel),
 every storage format (dense rows / CSR pages), and every tier (device /
-host) runs the SAME loop.  Sources implement the ``ScanSource`` protocol
-(``page_slice`` + ``to_device``), so nothing downstream ever branches on
-where the pages live.
+host / disk) runs the SAME loop.  Sources implement the ``ScanSource``
+protocol (``page_slice`` + ``to_device``), so nothing downstream ever
+branches on where the pages live — a disk-tier source's ``page_slice``
+is an ``np.memmap`` view, so its DMA reads straight off the file.
 
-The loop is a double-buffered DMA pipeline (``prefetch_depth=2``):
+The loop is a double-buffered DMA pipeline (``prefetch_depth=2``) with a
+TRULY asynchronous drain:
 
     batch i+1   pages in flight via async ``jax.device_put`` honoring the
-                store's ``data_sharding`` (host tier; a no-op view on the
-                device tier)
+                store's ``data_sharding`` (host/disk tiers; a no-op view
+                on the device tier) — issued by the compute thread
     batch i     runs its (shard_map-wrapped or mesh-less) fused kernel
-                stages
-    batch i-1   predictions drain (``copy_to_host_async``) into a
-                preallocated host result buffer
+                stages on the compute thread
+    batch i-1   predictions drain on a DEDICATED DRAIN WORKER THREAD:
+                the compute thread issues ``copy_to_host_async`` and
+                hands the prediction to the worker, which completes the
+                D2H (through a pinned host staging buffer where the
+                backend supports the ``pinned_host`` memory kind) and
+                writes it into the preallocated host result buffer
+
+Because the drain runs off the compute thread, batch i−1's D2H no longer
+blocks batch i's kernel stages — on hardware with real DMA engines the
+copy overlaps compute, and on XLA:CPU the (cheap) host writes still come
+off the critical path.  ``ScanStats`` accounts it honestly:
+``drain_s`` is the worker's total write time, ``drain_wait_s`` the time
+the COMPUTE thread was actually blocked on the drain (queue backpressure
++ the final join), and ``drain_overlap_s`` their difference — the share
+of drain work hidden behind compute.  ``prefetch_depth=1`` is the fully
+synchronous reference pipeline (inline drain, no worker), which the
+benchmarks use as the overlap baseline.
 
 At most ``MAX_IN_FLIGHT = 2`` device page buffers exist at any moment —
 asserted on every acquire, and reported as ``ScanStats.max_in_flight``.
+The drain worker holds per-batch PREDICTIONS ([rows]-sized, not page
+buffers), bounded by the queue, so the invariant is unaffected.
 
 The preallocated result buffer also retires the jax-0.4.37 concatenate
 workaround from the hot path: per-batch outputs are written into host
@@ -35,11 +54,16 @@ replicated operands (which XLA:CPU miscompiles by summing replicas) never
 runs.  ``tests/test_streaming.py`` keeps a pinned reproduction of the
 miscompile so a future jax bump can delete the note entirely; the host
 gather used here (per-shard copy + stitch) is not affected.
+
+See ``docs/architecture.md`` (tier ladder, drain pipeline) and
+``docs/benchmarks.md`` (how the stats surface in BENCH_stream.json).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import queue as queue_mod
+import threading
 import time
 from collections import deque
 from typing import Any, Iterator, Protocol, runtime_checkable
@@ -76,7 +100,7 @@ class ScanSource(Protocol):
     """
 
     name: str
-    tier: str                        # "device" | "host"
+    tier: str                        # "device" | "host" | "disk"
     num_rows: int                    # true N (pre-padding)
 
     @property
@@ -86,12 +110,13 @@ class ScanSource(Protocol):
     def page_rows(self) -> int: ...
 
     def page_slice(self, first_page: int, num_pages: int) -> Any:
-        """Contiguous page range in the source's OWN tier (device view or
-        host numpy view — views, not copies, on both tiers)."""
+        """Contiguous page range in the source's OWN tier (device view,
+        host numpy view, or disk mmap view — views, not copies, on every
+        tier; a disk view faults in only the pages the batch touches)."""
         ...
 
     def to_device(self, block: Any, sharding: Any = None) -> Any:
-        """Stage a block onto device(s).  Host tier: an (async)
+        """Stage a block onto device(s).  Host/disk tiers: an (async)
         ``jax.device_put`` honoring ``sharding``; device tier: identity
         (the no-op transfer stage)."""
         ...
@@ -99,20 +124,38 @@ class ScanSource(Protocol):
 
 @dataclasses.dataclass
 class ScanStats:
-    """Per-query streaming telemetry (attached to ``QueryResult.scan``)."""
+    """Per-query streaming telemetry (attached to ``QueryResult.scan``).
+
+    Every field is documented, with its BENCH_stream.json counterpart,
+    in ``docs/benchmarks.md``.
+    """
 
     tier: str                        # source tier the scan ran against
     batches: int                     # page batches executed
     batch_pages: int                 # pages per (full) batch
     prefetch_depth: int              # 1 = synchronous, 2 = double-buffered
     max_in_flight: int = 0           # peak live device page buffers (<= 2)
-    bytes_streamed: int = 0          # host->device bytes actually shipped
+    bytes_streamed: int = 0          # off-device->device bytes shipped
     transfer_issue_s: float = 0.0    # time spent ISSUING device_puts
     transfer_wait_s: float = 0.0     # EXPOSED wait for pages to be ready
     #                                  (what double-buffering hides)
     compute_s: float = 0.0           # kernel-stage wall time
     drain_s: float = 0.0             # device->host result-buffer writes
+    #                                  (on the WORKER thread when async)
+    drain_wait_s: float = 0.0        # compute-thread time BLOCKED on the
+    #                                  drain (backpressure + final join) —
+    #                                  the drain's EXPOSED cost
+    drain_async: bool = False        # drain ran on a dedicated worker
+    pinned_staging: bool = False     # D2H staged through pinned host mem
     wall_s: float = 0.0              # whole scan loop
+
+    @property
+    def drain_overlap_s(self) -> float:
+        """Drain work hidden behind compute: worker write time minus the
+        compute thread's exposed drain wait.  The inline drain (depth 1)
+        charges every write to BOTH fields, so this is 0 there — only the
+        async drain can hide work."""
+        return max(0.0, self.drain_s - self.drain_wait_s)
 
 
 @dataclasses.dataclass
@@ -129,6 +172,78 @@ def _block_nbytes(block) -> int:
     return sum(x.size * x.dtype.itemsize
                for x in jax.tree_util.tree_leaves(block)
                if hasattr(x, "dtype"))
+
+
+def _pinned_host_sharding():
+    """A ``pinned_host`` single-device sharding when the backend has that
+    memory kind (TPU/GPU — where D2H through pinned staging is a real DMA
+    fast path), else None (XLA:CPU only exposes ``unpinned_host``)."""
+    try:
+        dev = jax.local_devices()[0]
+        dev.memory("pinned_host")     # raises if the kind doesn't exist
+        return jax.sharding.SingleDeviceSharding(
+            dev, memory_kind="pinned_host")
+    except Exception:
+        return None
+
+
+class _ResultSink:
+    """The preallocated host result buffer + the drain that fills it.
+
+    ``write`` completes one batch's D2H (optionally staging through a
+    pinned host buffer) and stores the rows at their deterministic slot.
+    ``drain_loop`` is the dedicated worker thread's body: it consumes
+    (first_page, num_pages, prediction) items until the ``None`` sentinel,
+    never letting one batch's failure wedge the queue (the error is kept
+    and re-raised on the compute thread after the join).
+    """
+
+    def __init__(self, total_rows: int, page_rows: int,
+                 stats: ScanStats, pinned=None):
+        self.total_rows = total_rows
+        self.page_rows = page_rows
+        self.stats = stats
+        self.pinned = pinned
+        self.result: np.ndarray | None = None    # allocated at first write
+        self.error: BaseException | None = None
+
+    def wants_pinned(self, pred) -> bool:
+        """Pinned staging applies to single-device predictions only:
+        sharded mesh outputs take the per-shard host gather instead."""
+        return (self.pinned is not None
+                and getattr(pred, "sharding", None) is not None
+                and len(pred.sharding.device_set) == 1)
+
+    def write(self, first_page: int, num_pages: int, pred) -> None:
+        t0 = time.perf_counter()
+        if self.wants_pinned(pred):
+            # D2H DMA into pinned staging; np.asarray of a pinned_host
+            # array is then a cheap host-side view/copy.  This is the
+            # ONLY transfer on this path — submit() skips the plain
+            # copy_to_host_async for pinned-eligible predictions, else
+            # every batch would pay the D2H twice.
+            pred = jax.device_put(pred, self.pinned)
+            self.stats.pinned_staging = True
+        host = np.asarray(pred)                  # per-shard copy + stitch
+        if self.result is None:
+            self.result = np.empty(self.total_rows, host.dtype)
+        lo = first_page * self.page_rows
+        self.result[lo: lo + num_pages * self.page_rows] = host.reshape(-1)
+        self.stats.drain_s += time.perf_counter() - t0
+
+    def drain_loop(self, q: queue_mod.Queue) -> None:
+        while True:
+            item = q.get()
+            try:
+                if item is None:
+                    return
+                if self.error is None:           # fail fast, keep draining
+                    try:
+                        self.write(*item)
+                    except BaseException as e:   # noqa: BLE001 — re-raised
+                        self.error = e           # on the compute thread
+            finally:
+                q.task_done()
 
 
 class StreamingScanExecutor:
@@ -169,6 +284,9 @@ class StreamingScanExecutor:
         Returns (predictions [num_rows] host f32, per-batch stage
         reports, ScanStats).  Predictions land in a PREALLOCATED host
         buffer slot by slot — no concatenate anywhere on the hot path.
+        With ``prefetch_depth=2`` the buffer is filled by a dedicated
+        drain worker thread, so batch i−1's D2H never blocks batch i's
+        kernel stages; depth 1 drains inline (the synchronous reference).
         """
         R = source.page_rows
         plan = list(self.batch_plan(source.num_pages, batch_pages))
@@ -176,12 +294,27 @@ class StreamingScanExecutor:
                           batch_pages=batch_pages,
                           prefetch_depth=self.prefetch_depth)
         reports: list[StageReport] = []
-        result: np.ndarray | None = None   # allocated at first drain
         bufs: deque[_InFlight] = deque()   # acquired, not yet computed
-        drains: deque = deque()            # computed, not yet written out
         live = 0                           # live device page buffers
         next_i = 0
         t_wall = time.perf_counter()
+
+        # the async drain rides with double-buffering; depth 1 keeps the
+        # drain inline as the fully synchronous reference pipeline
+        async_drain = self.prefetch_depth >= 2 and len(plan) > 1
+        sink = _ResultSink(source.num_pages * R, R, stats,
+                           pinned=_pinned_host_sharding())
+        drain_q: queue_mod.Queue | None = None
+        worker: threading.Thread | None = None
+        if async_drain:
+            stats.drain_async = True
+            # bounded: backpressure caps how many [rows]-sized prediction
+            # arrays (NOT page buffers) the drain can hold behind compute
+            drain_q = queue_mod.Queue(maxsize=MAX_IN_FLIGHT)
+            worker = threading.Thread(target=sink.drain_loop,
+                                      args=(drain_q,),
+                                      name="scan-drain", daemon=True)
+            worker.start()
 
         def acquire():
             nonlocal live, next_i
@@ -191,7 +324,7 @@ class StreamingScanExecutor:
             t0 = time.perf_counter()
             block = source.to_device(block, self.sharding)  # async DMA
             stats.transfer_issue_s += time.perf_counter() - t0
-            if source.tier == "host":
+            if source.tier != "device":
                 stats.bytes_streamed += _block_nbytes(block)
             live += 1
             stats.max_in_flight = max(stats.max_in_flight, live)
@@ -199,46 +332,68 @@ class StreamingScanExecutor:
                 f"{live} device page buffers in flight (max {MAX_IN_FLIGHT})"
             bufs.append(_InFlight(k, first, n, block))
 
-        def drain(keep: int):
-            nonlocal result
-            while len(drains) > keep:
-                first, n, pred = drains.popleft()
+        def submit(first: int, n: int, pred):
+            """Hand batch i's prediction to the drain.  The D2H copy is
+            issued async HERE (on the compute thread) so it progresses
+            while the worker is busy; the worker completes and writes it.
+            Pinned-eligible predictions skip the plain async copy — their
+            one and only D2H is the worker's device_put into pinned
+            staging (two transfers would waste the DMA bandwidth the
+            pinned path exists to save)."""
+            if not sink.wants_pinned(pred) \
+                    and hasattr(pred, "copy_to_host_async"):
+                pred.copy_to_host_async()
+            if async_drain:
                 t0 = time.perf_counter()
-                host = np.asarray(pred)       # per-shard copy + stitch
-                if result is None:
-                    result = np.empty(source.num_pages * R, host.dtype)
-                result[first * R:(first + n) * R] = host.reshape(-1)
-                stats.drain_s += time.perf_counter() - t0
+                drain_q.put((first, n, pred))
+                stats.drain_wait_s += time.perf_counter() - t0
+            else:
+                t0 = time.perf_counter()
+                sink.write(first, n, pred)
+                stats.drain_wait_s += time.perf_counter() - t0
 
-        while next_i < len(plan) or bufs:
-            if not bufs:
-                acquire()
-            cur = bufs.popleft()
-            # batch i+1: issue its page DMA while batch i computes
-            while len(bufs) + 1 < self.prefetch_depth and next_i < len(plan):
-                acquire()
-            # batch i-1: drain while batch i's pages finish their DMA
-            drain(keep=0)
-            t0 = time.perf_counter()
-            jax.block_until_ready(cur.block)
-            stats.transfer_wait_s += time.perf_counter() - t0
-            t0 = time.perf_counter()
-            state, reps = run_stages(self.stages, {"x": cur.block})
-            stats.compute_s += time.perf_counter() - t0
-            reports.extend(reps)
-            pred = state[self.result_key]
-            if hasattr(pred, "copy_to_host_async"):
-                pred.copy_to_host_async()     # overlap with the next batch
-            drains.append((cur.first_page, cur.num_pages, pred))
-            # release the page buffer NOW: some plans thread "x" through
-            # to the final stage output, so dropping `state` (not just
-            # cur.block) is what actually frees the device pages — else a
-            # third buffer would be alive during the next prefetch
-            state = None
-            cur.block = None                  # at most 2 ever live
-            live -= 1
-        drain(keep=0)
+        try:
+            while next_i < len(plan) or bufs:
+                if sink.error is not None:
+                    break                     # a drained batch already
+                #                               failed: don't pay for the
+                #                               rest of the scan first
+                if not bufs:
+                    acquire()
+                cur = bufs.popleft()
+                # batch i+1: issue its page DMA while batch i computes
+                while len(bufs) + 1 < self.prefetch_depth \
+                        and next_i < len(plan):
+                    acquire()
+                t0 = time.perf_counter()
+                jax.block_until_ready(cur.block)
+                stats.transfer_wait_s += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                state, reps = run_stages(self.stages, {"x": cur.block})
+                stats.compute_s += time.perf_counter() - t0
+                reports.extend(reps)
+                submit(cur.first_page, cur.num_pages,
+                       state[self.result_key])
+                # release the page buffer NOW: some plans thread "x"
+                # through to the final stage output, so dropping `state`
+                # (not just cur.block) is what actually frees the device
+                # pages — else a third buffer would be alive during the
+                # next prefetch
+                state = None
+                cur.block = None              # at most 2 ever live
+                live -= 1
+        finally:
+            # shut the worker down on EVERY exit: a failing stage (or
+            # the in-flight assert) must not strand the daemon thread in
+            # q.get() pinning the result buffer for the process lifetime
+            if async_drain:
+                t0 = time.perf_counter()
+                drain_q.put(None)             # sentinel: no more batches
+                worker.join()
+                stats.drain_wait_s += time.perf_counter() - t0
+        if async_drain and sink.error is not None:
+            raise sink.error
 
         stats.wall_s = time.perf_counter() - t_wall
-        assert result is not None, "scan produced no batches"
-        return result[: source.num_rows], reports, stats
+        assert sink.result is not None, "scan produced no batches"
+        return sink.result[: source.num_rows], reports, stats

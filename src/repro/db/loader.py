@@ -14,12 +14,22 @@ figures (Fig. 4/5/6/7).
 
 Also here: synthetic generators for the paper's dataset grid (Tab. 1),
 shape-faithful but scale-parameterized so benchmarks run on CPU.
+
+Out-of-core ingest: ``load_libsvm_csr_external`` accepts ``tier=`` so a
+criteo-scale file can parse straight onto any rung of the store's tier
+ladder — ``"host"`` (page-aligned numpy, no device transfer) or
+``"disk"`` (page-aligned mmap files; scan-time residency bounded by the
+batch, though the parse itself still holds the CSR arrays in host RAM
+once) — with ``transfer_s == 0``; ``store.put_sparse(pages=...)`` then
+registers the result zero-copy.  See ``db/store.py`` and
+``docs/architecture.md`` §1.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import io
+import os
 import time
 
 import jax
@@ -178,7 +188,8 @@ def load_libsvm_external(path: str, num_features: int, *, device=None,
 
 def load_libsvm_csr_external(path: str, num_features: int, *,
                              page_rows: int = 512, pages_multiple: int = 1,
-                             tier: str = "device"):
+                             tier: str = "device",
+                             spill_dir: str | None = None):
     """Timed sparse load, SPARSE data plane: parse -> CSR pages -> transfer.
 
     Never materializes [N, F] on the host: parse builds host CSR lists,
@@ -194,13 +205,31 @@ def load_libsvm_csr_external(path: str, num_features: int, *,
     records 0): criteo-scale files parse straight into page-aligned host
     CSR blocks, ready for ``store.put_sparse(pages=..., tier="host")``
     and the streaming scan executor — the out-of-core ingest path, with
-    no device round-trip at load time.
+    no device round-trip at load time.  ``tier="disk"`` goes one rung
+    lower: the three page arrays are written to page-aligned
+    memory-mapped files and handed back as lazy ``np.memmap`` views —
+    ``store.put_sparse(pages=..., tier="disk")`` registers the maps
+    zero-copy and the SCAN faults in only the pages each batch touches,
+    so a file larger than both the device and host budgets streams
+    through inference (the parse/convert stages themselves still hold
+    the CSR arrays in host RAM once while writing the files).  The mmap
+    writes are part of the CONVERT stage; ``transfer_s`` is 0 for both
+    off-device tiers.
+
+    Page-file lifecycle: the files are owned by the CALLER, not by the
+    store (``put_sparse(pages=...)`` registers them zero-copy and will
+    not delete them on ``drop``).  Pass ``spill_dir`` to control where
+    they live; with ``spill_dir=None`` they land in a fresh
+    ``tempfile.mkdtemp`` directory that persists until the OS cleans
+    /tmp — each returned array's ``.filename`` attribute carries its
+    path for manual cleanup.
 
     Returns (CSRPages on ``tier``, labels [N] np, LoadTiming).
     """
     from repro.db.sparse import CSRPages, paginate_csr
+    from repro.db.store import mmap_array
 
-    if tier not in ("device", "host"):
+    if tier not in ("device", "host", "disk"):
         raise ValueError(f"unknown tier {tier!r}")
     t0 = time.perf_counter()
     indptr, indices, values, labels = _parse_libsvm(path)
@@ -210,8 +239,15 @@ def load_libsvm_csr_external(path: str, num_features: int, *,
         np.asarray(values, np.float32), num_rows=len(labels),
         page_rows=page_rows, n_features=num_features,
         pages_multiple=pages_multiple)
+    if tier == "disk":
+        import tempfile
+        d = spill_dir or tempfile.mkdtemp(prefix="libsvm-disk-")
+        stem = os.path.splitext(os.path.basename(path))[0]
+        ip, ix, vl = (mmap_array(os.path.join(d, f"{stem}.{lbl}.bin"), a)
+                      for lbl, a in
+                      (("indptr", ip), ("indices", ix), ("values", vl)))
     t2 = time.perf_counter()
-    if tier == "host":
+    if tier in ("host", "disk"):
         pages = CSRPages(indptr=ip, indices=ix, values=vl,
                          n_features=int(num_features))
         t3 = t2               # no device transfer: transfer_s == 0

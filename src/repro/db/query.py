@@ -59,17 +59,23 @@ bit-identical in f32.
 
 Streaming scan execution: the per-batch loop lives in ONE place — the
 ``StreamingScanExecutor`` (``db/executor.py``).  Every plan (udf / rel),
-storage format (dense / CSR), and memory tier (device-resident / host
-out-of-core) runs the same double-buffered loop: batch *i+1*'s pages are
-in DMA flight (async ``device_put`` under the store's ``data_sharding``)
-while batch *i* runs its kernel stages and batch *i−1*'s predictions
-drain into a preallocated host result buffer.  Device-tier datasets take
-the identical loop with a no-op transfer stage.  The result buffer also
-retired the jax-0.4.37 partially-replicated-concatenate workaround from
-the hot path (pinned reproduction in ``tests/test_streaming.py``).
+storage format (dense / CSR), and memory tier (device-resident / host /
+disk out-of-core) runs the same double-buffered loop: batch *i+1*'s
+pages are in DMA flight (async ``device_put`` under the store's
+``data_sharding``) while batch *i* runs its kernel stages and batch
+*i−1*'s predictions drain — on a DEDICATED WORKER THREAD — into a
+preallocated host result buffer, so the D2H never blocks the next
+batch's kernels.  Device-tier datasets take the identical loop with a
+no-op transfer stage; disk-tier datasets feed it ``np.memmap`` page
+views, so a LIBSVM file larger than both the device and host budgets
+streams end to end.  The result buffer also retired the jax-0.4.37
+partially-replicated-concatenate workaround from the hot path (pinned
+reproduction in ``tests/test_streaming.py``).
 
 Each stage is timed and its materialized bytes recorded, reproducing the
-paper's latency breakdowns.
+paper's latency breakdowns.  See ``docs/architecture.md`` for the plan /
+cache / tier design and ``docs/benchmarks.md`` for how the timings
+surface in the BENCH_*.json trajectories.
 """
 
 from __future__ import annotations
@@ -525,14 +531,15 @@ class ForestQueryEngine:
         t_query0 = time.perf_counter()
         if batch_pages is None:
             batch_pages = ds.num_pages
-            if tier == "host":
-                # out-of-core default: a batch is half the device budget
-                # (two in-flight page buffers together fit it), or a
-                # fixed footprint when no budget is set — an explicit
-                # host ingest must still stream, never whole-dataset
-                # device_put.  Sized in data-axis units, rounding DOWN,
-                # so the mesh divisibility round-up below cannot push
-                # the pair past the budget (floor: one page per device).
+            if tier != "device":
+                # out-of-core default (host AND disk tiers): a batch is
+                # half the device budget (two in-flight page buffers
+                # together fit it), or a fixed footprint when no budget
+                # is set — an explicit off-device ingest must still
+                # stream, never whole-dataset device_put.  Sized in
+                # data-axis units, rounding DOWN, so the mesh
+                # divisibility round-up below cannot push the pair past
+                # the budget (floor: one page per device).
                 budget = self.store.device_budget_bytes
                 target = budget // 2 if budget else DEFAULT_STREAM_BATCH_BYTES
                 unit = max(1, self.fplan.n_data)

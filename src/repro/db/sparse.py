@@ -69,9 +69,12 @@ class CSRPages:
 
     @property
     def tier(self) -> str:
-        """Where the page arrays live: host-tier pages are plain numpy
-        (the out-of-core store keeps them page-aligned on the host and
-        the streaming executor DMAs batch ranges to device)."""
+        """Where the page arrays live: disk-tier pages are ``np.memmap``
+        views of page-aligned spill files, host-tier pages plain numpy
+        (the out-of-core store keeps both page-aligned off-device and the
+        streaming executor DMAs batch ranges to device)."""
+        if isinstance(self.indptr, np.memmap):
+            return "disk"
         return "host" if isinstance(self.indptr, np.ndarray) else "device"
 
     @property
@@ -96,10 +99,11 @@ class CSRPages:
                    for a in (self.indptr, self.indices, self.values))
 
     def page_slice(self, first_page: int, num_pages: int) -> "CSRPages":
-        """Contiguous page range (a view in the pages' own tier), same
-        contract as the dense store's page_slice: page p of batch k is
-        always the same rows AND the same block shape."""
-        if self.tier == "host":
+        """Contiguous page range (a view in the pages' own tier — a
+        disk-tier slice is three lazy memmap views), same contract as the
+        dense store's page_slice: page p of batch k is always the same
+        rows AND the same block shape."""
+        if self.tier != "device":
             sl = lambda a: a[first_page:first_page + num_pages]
         else:
             sl = lambda a: jax.lax.dynamic_slice_in_dim(a, first_page,

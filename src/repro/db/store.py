@@ -20,21 +20,37 @@ determinism, consumed through the feature-gather prepass instead of being
 densified at full F).  Query plans key their compiled-plan cache on the
 format, so a dense and a CSR plan over the same model never collide.
 
-Memory tiers: every dataset also lives on exactly one TIER.
+Memory tiers: every dataset also lives on exactly one rung of the TIER
+LADDER (see ``docs/architecture.md`` for the full design):
 
   ``device``  the original layout — device-resident jax arrays, consumed
               by kernels with zero staging (dataset size capped by HBM);
-  ``host``    page-aligned host numpy blocks — the out-of-core tier.  The
-              streaming scan executor (``db/executor.py``) pages a host
-              dataset through device memory batch by batch, double
-              buffered, so datasets far larger than device memory execute.
+  ``host``    page-aligned host numpy blocks — the in-RAM out-of-core
+              tier.  The streaming scan executor (``db/executor.py``)
+              pages a host dataset through device memory batch by batch,
+              double buffered, so datasets far larger than device memory
+              execute;
+  ``disk``    page-aligned memory-mapped files under the store's
+              ``spill_dir`` — the bottom rung.  Dense rows are one mmap
+              file; a CSR dataset is three (indptr / indices / values
+              page arrays).  A disk dataset's ``page_slice`` is an
+              ``np.memmap`` VIEW: only the pages a batch actually
+              touches are ever faulted in, so the SCAN's steady-state
+              host residency is bounded by the batch, not the dataset.
+              (Ingest itself still materializes the array once in host
+              RAM while writing the file — the tier bounds scan-time
+              residency, not ingest residency.)
 
 ``put(..., tier=...)`` / ``put_sparse(..., tier=...)`` accept an explicit
-tier or ``"auto"``: with a ``device_budget_bytes`` knob set on the store,
-an ingest that would push the device-resident total past the budget spills
-to the host tier automatically.  Catalog entries carry the tier, and the
-store accounts ``nbytes`` PER TIER (``device_nbytes`` / ``host_nbytes``).
-Both dataset classes implement the executor's ``ScanSource`` protocol
+tier or ``"auto"``: the auto cascade walks the ladder top-down — an
+ingest that would push the device-resident total past
+``device_budget_bytes`` spills to host, and one that would also push the
+host-resident total past ``host_budget_bytes`` spills to disk.  Catalog
+entries carry the tier, and the store accounts ``nbytes`` PER TIER
+(``device_nbytes`` / ``host_nbytes`` / ``disk_nbytes``).  ``store.move``
+migrates a dataset between any two tiers preserving the page layout
+exactly; ``store.drop`` deletes the spill files the store created.  Both
+dataset classes implement the executor's ``ScanSource`` protocol
 (``page_slice`` in their own tier + ``to_device`` staging), so no caller
 ever branches on where pages live.
 """
@@ -42,6 +58,10 @@ ever branches on where pages live.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
+import re
+import tempfile
 import time
 import weakref
 from typing import Any, Callable, Iterator
@@ -53,9 +73,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.db.sparse import CSRPages, csr_from_dense, paginate_csr
 
-__all__ = ["StoredDataset", "SparseStoredDataset", "TensorBlockStore"]
+__all__ = ["StoredDataset", "SparseStoredDataset", "TensorBlockStore",
+           "mmap_array", "TIERS"]
 
-TIERS = ("device", "host")
+#: the tier ladder, fastest first — the ``auto`` cascade walks it top-down
+TIERS = ("device", "host", "disk")
 
 
 def _check_tier(tier: str) -> str:
@@ -64,12 +86,40 @@ def _check_tier(tier: str) -> str:
     return tier
 
 
+def _host_copy(a) -> np.ndarray:
+    """Materialize ANY tier's array as a plain host ndarray copy (mmap
+    views must be read fully off the file before the file can go away)."""
+    out = jax.device_get(a)
+    return np.array(out) if isinstance(out, np.memmap) \
+        else np.ascontiguousarray(out)
+
+
+def mmap_array(path: str, arr: np.ndarray) -> np.memmap:
+    """Write ``arr`` to ``path`` as a raw page-aligned memory-mapped file
+    and return the live map.
+
+    Raw (headerless) layout at offset 0, C-contiguous: logical store page
+    ``p`` occupies exactly bytes ``[p * page_nbytes, (p+1) * page_nbytes)``
+    of the file, so a ``page_slice`` view faults in only the OS pages that
+    batch touches.  An existing file is unlinked first (never truncated in
+    place — truncating a mapped file SIGBUSes readers of the old map; the
+    unlinked inode stays alive for them).
+    """
+    if os.path.exists(path):
+        os.unlink(path)
+    mm = np.memmap(path, dtype=arr.dtype, mode="w+", shape=arr.shape)
+    mm[...] = arr
+    mm.flush()
+    return mm
+
+
 @dataclasses.dataclass
 class StoredDataset:
     name: str
     data: Any                     # [N_padded, F]: jax.Array (device tier,
-    #                               row-sharded) or np.ndarray (host tier,
-    #                               page-aligned pages)
+    #                               row-sharded), np.ndarray (host tier,
+    #                               page-aligned pages), or np.memmap
+    #                               (disk tier, page-aligned mmap file)
     num_rows: int                 # true N (pre-padding)
     page_rows: int
     labels: jax.Array | None = None
@@ -97,16 +147,20 @@ class StoredDataset:
 
     def page_slice(self, first_page: int, num_pages: int):
         """[num_pages * page_rows, F] contiguous page range, a VIEW in the
-        dataset's own tier (device slice / host numpy view)."""
+        dataset's own tier (device slice / host numpy view / np.memmap
+        view — a disk-tier slice stays lazy: only the OS pages the batch
+        touches are faulted in, never the whole file)."""
         lo = first_page * self.page_rows
-        if self.tier == "host":
+        if self.tier != "device":
             return self.data[lo: lo + num_pages * self.page_rows]
         return jax.lax.dynamic_slice_in_dim(
             self.data, lo, num_pages * self.page_rows, axis=0)
 
     def to_device(self, block, sharding=None):
-        """ScanSource staging: host tier issues an (async) device_put
-        honoring the store's data sharding; device tier is a no-op."""
+        """ScanSource staging: host/disk tiers issue an (async) device_put
+        honoring the store's data sharding (a disk-tier mmap view is read
+        straight into the transfer — no intermediate host copy of the
+        whole dataset ever exists); device tier is a no-op."""
         if self.tier == "device":
             return block
         return jax.device_put(block, sharding)
@@ -127,8 +181,9 @@ class SparseStoredDataset:
     every page block has one fixed shape), but rows live compressed —
     pages beyond ``num_rows`` are EMPTY rows (every feature missing),
     mirroring the dense store's NaN padding rows.  On the host tier the
-    three page arrays are numpy; ``to_device`` ships all three under the
-    store's data sharding (a CSRPages pytree is one ``device_put``).
+    three page arrays are numpy, on the disk tier three memory-mapped
+    page files; ``to_device`` ships all three under the store's data
+    sharding (a CSRPages pytree is one ``device_put``).
     """
 
     name: str
@@ -184,23 +239,67 @@ class SparseStoredDataset:
 class TensorBlockStore:
     """Catalog of tiered datasets (one store per pod; DESIGN §8).
 
-    ``device_budget_bytes``: soft cap on device-resident dataset bytes.
-    ``tier="auto"`` ingests that would exceed it spill to the host tier,
-    where the streaming scan executor pages them through device memory.
+    ``device_budget_bytes`` / ``host_budget_bytes``: soft caps on the
+    device- and host-resident dataset totals.  ``tier="auto"`` ingests
+    cascade down the ladder: past the device budget they spill to host,
+    past the host budget too they spill to disk (page-aligned mmap files
+    under ``spill_dir``), where the streaming scan executor pages them
+    through device memory.
     """
 
     def __init__(self, mesh: Mesh | None = None, *,
                  default_page_rows: int = 1024,
-                 device_budget_bytes: int | None = None):
+                 device_budget_bytes: int | None = None,
+                 host_budget_bytes: int | None = None,
+                 spill_dir: str | None = None):
         self.mesh = mesh
         self.default_page_rows = default_page_rows
         self.device_budget_bytes = device_budget_bytes
+        self.host_budget_bytes = host_budget_bytes
+        self._spill_dir = spill_dir
+        # spill files THIS store wrote, per dataset (loader-owned page
+        # files handed over via put_sparse(pages=...) are not tracked —
+        # the store only deletes what it created)
+        self._disk_paths: dict[str, list[str]] = {}
         self._datasets: dict[str, StoredDataset | SparseStoredDataset] = {}
         # drop-invalidation hooks: engines register their
         # invalidate_dataset so dropping a dataset sweeps the compiled
         # plans built against it (weakrefs — a dead engine unregisters
         # itself by getting collected)
         self._invalidators: list[weakref.ref] = []
+
+    # -- disk-tier spill files ----------------------------------------------
+    @property
+    def spill_dir(self) -> str:
+        """Directory holding this store's disk-tier page files (created
+        lazily: stores that never spill to disk touch no filesystem)."""
+        if self._spill_dir is None:
+            self._spill_dir = tempfile.mkdtemp(prefix="tbstore-disk-")
+        return self._spill_dir
+
+    def _disk_array(self, name: str, label: str, arr: np.ndarray
+                    ) -> np.memmap:
+        """Spill one page array to ``spill_dir`` and track the file.
+
+        The filename carries a short digest of the RAW dataset name:
+        sanitization is lossy ("a/b" and "a:b" both flatten to "a_b"),
+        and two datasets sharing a path would unlink each other's
+        backing files through the spill lifecycle."""
+        digest = hashlib.blake2s(name.encode(), digest_size=4).hexdigest()
+        stem = f"{re.sub(r'[^A-Za-z0-9._@+-]', '_', name)}-{digest}"
+        path = os.path.join(self.spill_dir, f"{stem}.{label}.bin")
+        mm = mmap_array(path, arr)
+        self._disk_paths.setdefault(name, []).append(path)
+        return mm
+
+    def _release_disk(self, name: str) -> None:
+        """Delete the spill files written for ``name`` (live memmap views
+        keep the unlinked inodes readable until they are collected)."""
+        for path in self._disk_paths.pop(name, ()):
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
 
     # -- mesh contract ------------------------------------------------------
     @property
@@ -232,16 +331,27 @@ class TensorBlockStore:
         return sum(d.nbytes for d in self._datasets.values()
                    if d.tier == "host")
 
+    @property
+    def disk_nbytes(self) -> int:
+        return sum(d.nbytes for d in self._datasets.values()
+                   if d.tier == "disk")
+
     def _resolve_tier(self, tier: str, ingest_nbytes: int) -> str:
-        """``auto`` spills to host when the ingest would push the
-        device-resident total past ``device_budget_bytes``."""
+        """``auto`` cascades down the tier ladder: an ingest that would
+        push the device-resident total past ``device_budget_bytes``
+        spills to host, and one that would also push the host-resident
+        total past ``host_budget_bytes`` spills to disk."""
         if tier != "auto":
             return _check_tier(tier)
-        if (self.device_budget_bytes is not None
-                and self.device_nbytes + ingest_nbytes
-                > self.device_budget_bytes):
+        if (self.device_budget_bytes is None
+                or self.device_nbytes + ingest_nbytes
+                <= self.device_budget_bytes):
+            return "device"
+        if (self.host_budget_bytes is None
+                or self.host_nbytes + ingest_nbytes
+                <= self.host_budget_bytes):
             return "host"
-        return "device"
+        return "disk"
 
     # -- ingestion ----------------------------------------------------------
     def put(
@@ -257,7 +367,8 @@ class TensorBlockStore:
     ) -> StoredDataset:
         """Ingest [N, F] rows: pad to whole pages (NaN rows — never counted
         in results), resolve the tier, lay out (device: shard rows over the
-        mesh ``data`` axis; host: keep page-aligned numpy), register."""
+        mesh ``data`` axis; host: keep page-aligned numpy; disk: write one
+        page-aligned mmap file), register."""
         page_rows = page_rows or self.default_page_rows
         arr = np.asarray(jax.device_get(data))
         n = arr.shape[0]
@@ -269,8 +380,12 @@ class TensorBlockStore:
                 [arr, np.full((pad, arr.shape[1]), np.nan, arr.dtype)])
         np_dtype = np.dtype(dtype)
         tier = self._resolve_tier(tier, arr.size * np_dtype.itemsize)
+        self._release_disk(name)          # re-put: old spill files go away
         if tier == "host":
             stored = np.ascontiguousarray(arr, np_dtype)
+        elif tier == "disk":
+            stored = self._disk_array(
+                name, "rows", np.ascontiguousarray(arr, np_dtype))
         else:
             stored = jnp.asarray(arr, dtype)
             sharding = self.data_sharding()
@@ -303,10 +418,11 @@ class TensorBlockStore:
         """Ingest a CSR dataset (the sparse data plane).
 
         Three entry points, most-compressed first:
-          * ``pages`` — already-paginated CSRPages, device or host arrays
-            (the LIBSVM→CSR loader hands these over; with ``tier="host"``
-            a host-paged loader result is registered with ZERO device
-            work — criteo-scale files never round-trip the device);
+          * ``pages`` — already-paginated CSRPages, device, host, or disk
+            arrays (the LIBSVM→CSR loader hands these over; with
+            ``tier="host"`` / ``tier="disk"`` a loader result already on
+            that tier is registered with ZERO device work AND zero copy —
+            criteo-scale files never round-trip the device);
           * ``csr`` — host (indptr [N+1], indices, values) triple;
           * ``data`` — dense-with-NaN host rows (NaN = missing; explicit
             zeros kept unless ``drop_zeros``), converted here.
@@ -316,24 +432,17 @@ class TensorBlockStore:
         """
         page_rows = page_rows or self.default_page_rows
         pages_multiple = self.data_axis_size
+        self._release_disk(name)          # re-put: old spill files go away
 
         if pages is not None:
             # already-paginated pages: never round-trip through the host
-            # (a device-tier handoff stays on device; only a tier
-            # MISMATCH migrates)
+            # (a handoff already on the resolved tier is zero-copy; only
+            # a tier MISMATCH migrates)
             if num_rows is None:
                 raise ValueError("num_rows is required with pages=")
             num_features = pages.n_features
             tier = self._resolve_tier(tier, pages.nbytes)
-            if tier == "host":
-                if pages.tier != "host":
-                    pages = CSRPages(
-                        indptr=np.asarray(jax.device_get(pages.indptr)),
-                        indices=np.asarray(jax.device_get(pages.indices)),
-                        values=np.asarray(jax.device_get(pages.values)),
-                        n_features=int(num_features))
-                stored = pages
-            else:
+            if tier == "device":
                 # jnp.asarray is a no-op on arrays already on device
                 stored = CSRPages(indptr=jnp.asarray(pages.indptr),
                                   indices=jnp.asarray(pages.indices),
@@ -342,6 +451,23 @@ class TensorBlockStore:
                 sharding = self.data_sharding()
                 if sharding is not None:
                     stored = jax.device_put(stored, sharding)
+            elif tier == pages.tier:
+                stored = pages            # zero-copy handoff
+            elif tier == "host":
+                stored = CSRPages(
+                    indptr=_host_copy(pages.indptr),
+                    indices=_host_copy(pages.indices),
+                    values=_host_copy(pages.values),
+                    n_features=int(num_features))
+            else:                         # spill the handoff to disk
+                stored = CSRPages(
+                    indptr=self._disk_array(
+                        name, "indptr", _host_copy(pages.indptr)),
+                    indices=self._disk_array(
+                        name, "indices", _host_copy(pages.indices)),
+                    values=self._disk_array(
+                        name, "values", _host_copy(pages.values)),
+                    n_features=int(num_features))
         else:
             if csr is None:
                 if data is None:
@@ -362,6 +488,12 @@ class TensorBlockStore:
             if tier == "host":
                 stored = CSRPages(indptr=ip, indices=ix, values=vl,
                                   n_features=int(num_features))
+            elif tier == "disk":
+                stored = CSRPages(
+                    indptr=self._disk_array(name, "indptr", ip),
+                    indices=self._disk_array(name, "indices", ix),
+                    values=self._disk_array(name, "values", vl),
+                    n_features=int(num_features))
             else:
                 stored = CSRPages(indptr=jnp.asarray(ip),
                                   indices=jnp.asarray(ix),
@@ -389,39 +521,40 @@ class TensorBlockStore:
 
     # -- tier migration -----------------------------------------------------
     def move(self, name: str, tier: str):
-        """Migrate a dataset between tiers (eviction: device -> host;
-        promotion: host -> device).  Page layout is preserved exactly, so
-        the page↔batch mapping — and therefore every prediction — is
-        unchanged; compiled plans stay valid (tier is a runtime property
-        of the scan, not of the plan)."""
+        """Migrate a dataset between any two tiers of the ladder
+        (eviction: device -> host -> disk; promotion: the reverse).  Page
+        layout is preserved exactly, so the page↔batch mapping — and
+        therefore every prediction — is unchanged; compiled plans stay
+        valid (tier is a runtime property of the scan, not of the plan).
+        Moving OFF the disk tier deletes the spill files this store wrote
+        (after the copy — live views keep the unlinked inodes alive)."""
         _check_tier(tier)
         ds = self.get(name)
         if ds.tier == tier:
             return ds
+        was_disk = ds.tier == "disk"
         sharding = self.data_sharding()
-        if ds.storage_format == "csr":
+
+        def relocate(label: str, arr):
+            """One page array, source tier -> target tier."""
             if tier == "host":
-                pages = CSRPages(
-                    indptr=np.asarray(jax.device_get(ds.pages.indptr)),
-                    indices=np.asarray(jax.device_get(ds.pages.indices)),
-                    values=np.asarray(jax.device_get(ds.pages.values)),
-                    n_features=ds.pages.n_features)
-            else:
-                pages = CSRPages(indptr=jnp.asarray(ds.pages.indptr),
-                                 indices=jnp.asarray(ds.pages.indices),
-                                 values=jnp.asarray(ds.pages.values),
-                                 n_features=ds.pages.n_features)
-                if sharding is not None:
-                    pages = jax.device_put(pages, sharding)
+                return _host_copy(arr)
+            if tier == "disk":
+                return self._disk_array(name, label, _host_copy(arr))
+            out = jnp.asarray(np.asarray(jax.device_get(arr)))
+            return out if sharding is None else jax.device_put(out, sharding)
+
+        if ds.storage_format == "csr":
+            pages = CSRPages(indptr=relocate("indptr", ds.pages.indptr),
+                             indices=relocate("indices", ds.pages.indices),
+                             values=relocate("values", ds.pages.values),
+                             n_features=ds.pages.n_features)
             new = dataclasses.replace(ds, pages=pages, tier=tier)
         else:
-            if tier == "host":
-                data = np.asarray(jax.device_get(ds.data))
-            else:
-                data = jnp.asarray(ds.data)
-                if sharding is not None:
-                    data = jax.device_put(data, sharding)
-            new = dataclasses.replace(ds, data=data, tier=tier)
+            new = dataclasses.replace(ds, data=relocate("rows", ds.data),
+                                      tier=tier)
+        if was_disk:
+            self._release_disk(name)
         self._datasets[name] = new
         return new
 
@@ -446,8 +579,10 @@ class TensorBlockStore:
         (compiled plans close over batch signatures derived from the
         dataset — leaving them resident after a drop pins device buffers
         and serves entries for data that no longer exists).  Returns the
-        number of cache entries invalidated across registered engines."""
+        number of cache entries invalidated across registered engines.
+        Disk-tier spill files this store wrote are deleted."""
         existed = self._datasets.pop(name, None)
+        self._release_disk(name)
         invalidated = 0
         if existed is not None:
             for ref in list(self._invalidators):

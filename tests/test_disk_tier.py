@@ -1,0 +1,434 @@
+"""Disk tier + async drain: the bottom rung of the tier ladder.
+
+The contracts under test:
+  * disk-tier, host-tier, and device-tier executions are BIT-identical
+    in f32, for dense and CSR storage, through udf and rel plans,
+    mesh-less and (in the multi-device section, which skips without 8
+    forced CPU devices) on a (data x model) mesh;
+  * ``tier="auto"`` CASCADES device-budget -> host-budget -> disk: an
+    ingest past both budgets lands on page-aligned mmap files, with
+    per-tier nbytes accounting (``disk_nbytes``) and catalog tiers;
+  * a disk dataset's ``page_slice`` is a lazy ``np.memmap`` VIEW (the
+    whole array is never loaded host-resident);
+  * ``store.move`` round-trips through ``disk`` (device -> disk -> host
+    -> device) preserving predictions bitwise, and deletes the spill
+    files it wrote when a dataset leaves the disk tier (or is dropped);
+  * ``load_libsvm_csr_external(tier="disk")`` parses straight into page
+    files with ``transfer_s == 0`` and hands back memmaps that
+    ``put_sparse(..., tier="disk")`` registers zero-copy;
+  * the ASYNC DRAIN (a dedicated worker thread consuming
+    ``copy_to_host_async`` results into the preallocated buffer) keeps
+    the <=2-device-page-buffer invariant — re-probed with live arrays —
+    and its ``ScanStats`` accounting distinguishes worker write time
+    (``drain_s``) from the compute thread's exposed wait
+    (``drain_wait_s``); ``prefetch_depth=1`` stays fully synchronous.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reuse import ModelReuseCache
+from repro.core.train import TrainConfig, train_forest
+from repro.db import loader as ld
+from repro.db.executor import MAX_IN_FLIGHT, StreamingScanExecutor
+from repro.db.query import ForestQueryEngine
+from repro.db.store import TensorBlockStore
+
+N, F, T, PAGE = 384, 16, 24, 32
+FUSED = "predicated_pallas_fused"
+SPARSE_ALGO = "hummingbird_pallas_fused"
+TIERS = ("device", "host", "disk")
+
+
+@pytest.fixture(scope="module")
+def data_and_forest():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(N, F)).astype(np.float32)
+    w = rng.normal(size=F).astype(np.float32)
+    y = (x @ w > 0).astype(np.float32)
+    forest = train_forest(x, y, TrainConfig(model_type="xgboost",
+                                            num_trees=T, max_depth=4))
+    xs = x.copy()
+    xs[rng.random(x.shape) < 0.7] = np.nan
+    return x, xs, forest
+
+
+def _engine(store):
+    return ForestQueryEngine(store, reuse_cache=ModelReuseCache(),
+                             plan_cache=ModelReuseCache())
+
+
+def _put_all_tiers(x, xs, *, mesh=None, page_rows=PAGE):
+    """One store holding every (format, tier) combination of the data."""
+    store = TensorBlockStore(mesh, default_page_rows=page_rows)
+    for tier in TIERS:
+        store.put(f"dense@{tier}", x, tier=tier)
+        store.put_sparse(f"csr@{tier}", xs, tier=tier)
+    return store
+
+
+# ---------------------------------------------------------------------------
+# the auto cascade: device budget -> host budget -> disk
+# ---------------------------------------------------------------------------
+
+
+def test_auto_cascade_device_host_disk():
+    """Three same-sized auto ingests walk the whole ladder: the first
+    fits the device budget, the second spills to host, the third busts
+    the host budget too and lands on disk — with per-tier accounting."""
+    x = np.ones((256, 8), np.float32)
+    store = TensorBlockStore(default_page_rows=32,
+                             device_budget_bytes=int(x.nbytes * 1.5),
+                             host_budget_bytes=int(x.nbytes * 1.5))
+    a, b, c = store.put("a", x), store.put("b", x), store.put("c", x)
+    assert (a.tier, b.tier, c.tier) == ("device", "host", "disk")
+    assert isinstance(c.data, np.memmap)
+    assert store.device_nbytes == a.nbytes
+    assert store.host_nbytes == b.nbytes
+    assert store.disk_nbytes == c.nbytes
+    cat = store.catalog()
+    assert [cat[k]["tier"] for k in "abc"] == ["device", "host", "disk"]
+    # a fourth ingest keeps landing on disk (the ladder has no floor cap)
+    assert store.put("d", x).tier == "disk"
+    # explicit tier= still overrides the cascade in any direction
+    assert store.put("e", x, tier="device").tier == "device"
+    assert store.put("f", x, tier="disk").tier == "disk"
+
+
+def test_sparse_auto_cascade(data_and_forest):
+    """CSR ingests cascade identically; all three page arrays are mmap."""
+    _, xs, _ = data_and_forest
+    store = TensorBlockStore(default_page_rows=PAGE,
+                             device_budget_bytes=1, host_budget_bytes=1)
+    ds = store.put_sparse("s", xs)
+    assert ds.tier == "disk" and ds.pages.tier == "disk"
+    for arr in (ds.pages.indptr, ds.pages.indices, ds.pages.values):
+        assert isinstance(arr, np.memmap)
+    assert store.disk_nbytes == ds.nbytes
+    assert store.device_nbytes == 0 and store.host_nbytes == 0
+    assert store.catalog()["s"]["tier"] == "disk"
+
+
+def test_disk_page_slice_is_lazy_mmap_view(data_and_forest):
+    """page_slice on the disk tier must NOT load the whole array: it is
+    an np.memmap view whose buffer is the spill file itself."""
+    x, xs, _ = data_and_forest
+    store = _put_all_tiers(x, xs)
+    dd = store.get("dense@disk")
+    blk = dd.page_slice(2, 3)
+    assert isinstance(blk, np.memmap)
+    assert blk.base is not None                 # a view, not a copy
+    np.testing.assert_array_equal(np.asarray(blk),
+                                  x[2 * PAGE: 5 * PAGE])
+    sd = store.get("csr@disk")
+    sblk = sd.page_slice(1, 2)
+    assert sblk.tier == "disk"
+    for arr in (sblk.indptr, sblk.indices, sblk.values):
+        assert isinstance(arr, np.memmap) and arr.base is not None
+    # staging a disk view is a plain device transfer of just those pages
+    dev = dd.to_device(blk, None)
+    assert isinstance(dev, jax.Array)
+
+
+# ---------------------------------------------------------------------------
+# bit-identical disk vs host vs device predictions (mesh-less half; the
+# mesh half of the grid is in the multi-device section below)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("plan", ["udf", "rel"])
+@pytest.mark.parametrize("fmt,algo", [("dense", FUSED),
+                                      ("csr", SPARSE_ALGO)])
+def test_disk_tier_bitwise_parity(data_and_forest, plan, fmt, algo):
+    x, xs, forest = data_and_forest
+    engine = _engine(_put_all_tiers(x, xs))
+    kw = dict(algorithm=algo, plan=plan, batch_pages=3)
+    res = {t: engine.infer(f"{fmt}@{t}", forest, **kw) for t in TIERS}
+    assert [res[t].tier for t in TIERS] == list(TIERS)
+    rd = res["disk"]
+    assert rd.storage_format == fmt
+    assert rd.scan.batches > 1 and rd.scan.bytes_streamed > 0
+    assert rd.scan.drain_async                   # worker-thread drain ran
+    for t in ("host", "disk"):
+        assert np.array_equal(np.asarray(res[t].predictions),
+                              np.asarray(res["device"].predictions)), \
+            f"{t} f32 bitwise parity"
+
+
+def test_larger_than_both_budgets_streams_from_disk(data_and_forest):
+    """The acceptance shape: an ingest larger than device AND host
+    budgets cascades to disk, infer() derives an out-of-core batch size
+    (2 in-flight buffers fit the device budget), the scan never falls
+    back to a resident tier, and predictions are bit-identical to the
+    device-resident run."""
+    x, xs, forest = data_and_forest
+    dev = _engine(_put_all_tiers(x, xs))
+    store = TensorBlockStore(default_page_rows=PAGE,
+                             device_budget_bytes=x.nbytes // 4,
+                             host_budget_bytes=x.nbytes // 4)
+    ds = store.put("big", x)
+    assert ds.tier == "disk"
+    assert ds.nbytes >= 4 * (x.nbytes // 4)
+    engine = _engine(store)
+    for plan in ("udf", "rel"):
+        res = engine.infer("big", forest, algorithm=FUSED, plan=plan)
+        assert res.tier == "disk" and res.scan.tier == "disk"
+        assert res.scan.batches > 1
+        assert res.scan.max_in_flight <= MAX_IN_FLIGHT
+        assert 2 * res.scan.batch_pages * ds.page_nbytes \
+            <= store.device_budget_bytes
+        ref = dev.infer("dense@device", forest, algorithm=FUSED, plan=plan,
+                        batch_pages=res.scan.batch_pages)
+        assert np.array_equal(np.asarray(res.predictions),
+                              np.asarray(ref.predictions))
+
+
+# ---------------------------------------------------------------------------
+# move: round-trips through disk + spill-file lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_move_roundtrip_through_disk(data_and_forest):
+    """device -> disk -> host -> device: page layout (and therefore every
+    prediction) survives the full ladder round-trip bitwise, for dense
+    AND CSR datasets."""
+    x, xs, forest = data_and_forest
+    store = _put_all_tiers(x, xs)
+    engine = _engine(store)
+    kw = dict(algorithm=FUSED, plan="udf", batch_pages=2)
+    ref = engine.infer("dense@device", forest, **kw)
+    for tier in ("disk", "host", "device"):
+        moved = store.move("dense@device", tier)
+        assert moved.tier == tier
+        r = engine.infer("dense@device", forest, **kw)
+        assert r.tier == tier
+        assert np.array_equal(np.asarray(r.predictions),
+                              np.asarray(ref.predictions)), tier
+    skw = dict(algorithm=SPARSE_ALGO, plan="rel", batch_pages=2)
+    ref_s = engine.infer("csr@device", forest, **skw)
+    for tier in ("disk", "host", "device"):
+        moved = store.move("csr@device", tier)
+        assert moved.tier == tier and moved.pages.tier == tier
+        r = engine.infer("csr@device", forest, **skw)
+        assert np.array_equal(np.asarray(r.predictions),
+                              np.asarray(ref_s.predictions)), tier
+
+
+def test_spill_file_lifecycle(data_and_forest):
+    """The store deletes the spill files it wrote: on move off the disk
+    tier and on drop.  A store that never spills touches no filesystem."""
+    x, xs, _ = data_and_forest
+    store = TensorBlockStore(default_page_rows=PAGE)
+    assert store._spill_dir is None              # lazy: no dir yet
+    store.put("d", x, tier="disk")
+    store.put_sparse("s", xs, tier="disk")
+    files = set(os.listdir(store.spill_dir))
+    assert len(files) == 4                       # 1 dense + 3 CSR arrays
+    store.move("d", "host")
+    assert len(os.listdir(store.spill_dir)) == 3
+    store.move("d", "disk")                      # re-spill recreates it
+    assert len(os.listdir(store.spill_dir)) == 4
+    store.drop("d")
+    store.drop("s")
+    assert os.listdir(store.spill_dir) == []
+
+
+# ---------------------------------------------------------------------------
+# loader tier="disk" (the criteo-scale ingest path)
+# ---------------------------------------------------------------------------
+
+
+def test_libsvm_disk_tier_ingest(tmp_path, data_and_forest):
+    _, xs, forest = data_and_forest
+    y = np.zeros(xs.shape[0], np.float32)
+    p = str(tmp_path / "d.svm")
+    ld.write_libsvm(p, xs, y)
+    pages, labels, t = ld.load_libsvm_csr_external(
+        p, xs.shape[1], page_rows=PAGE, tier="disk",
+        spill_dir=str(tmp_path))
+    assert t.transfer_s == 0.0, "disk-tier ingest must not transfer"
+    assert t.parse_s > 0 and t.convert_s > 0 and t.total_s > 0
+    assert pages.tier == "disk"
+    for arr in (pages.indptr, pages.indices, pages.values):
+        assert isinstance(arr, np.memmap)
+    assert {f for f in os.listdir(tmp_path) if f.endswith(".bin")} == \
+        {"d.indptr.bin", "d.indices.bin", "d.values.bin"}
+    # zero-copy registration + bit-parity with the device-tier load
+    store = TensorBlockStore(default_page_rows=PAGE)
+    ds = store.put_sparse("k", pages=pages, num_rows=len(labels),
+                          tier="disk")
+    assert ds.tier == "disk"
+    assert ds.pages.indptr is pages.indptr       # zero-copy handoff
+    pages_d, _, t_d = ld.load_libsvm_csr_external(p, xs.shape[1],
+                                                  page_rows=PAGE)
+    assert t_d.transfer_s > 0.0
+    store.put_sparse("dev", pages=pages_d, num_rows=len(labels))
+    engine = _engine(store)
+    rk = engine.infer("k", forest, algorithm=SPARSE_ALGO, plan="udf",
+                      batch_pages=2)
+    rd = engine.infer("dev", forest, algorithm=SPARSE_ALGO, plan="udf",
+                      batch_pages=2)
+    assert rk.tier == "disk" and rk.storage_format == "csr"
+    assert np.array_equal(np.asarray(rk.predictions),
+                          np.asarray(rd.predictions))
+
+
+# ---------------------------------------------------------------------------
+# async drain: off-thread accounting + the <=2-buffer invariant re-probed
+# ---------------------------------------------------------------------------
+
+
+def test_async_drain_stats_and_serial_reference(data_and_forest):
+    """Depth 2 drains on the worker (drain_async, exposed wait accounted
+    separately from worker write time); depth 1 is the fully synchronous
+    reference (no worker, every write exposed, zero hidden overlap) —
+    and both produce identical predictions."""
+    x, xs, forest = data_and_forest
+    engine = _engine(_put_all_tiers(x, xs))
+    kw = dict(algorithm=FUSED, plan="udf", batch_pages=2)
+    res = engine.infer("dense@disk", forest, prefetch_depth=2, **kw)
+    assert res.scan.drain_async
+    assert res.scan.drain_s > 0.0
+    assert res.scan.drain_overlap_s >= 0.0
+    ser = engine.infer("dense@disk", forest, prefetch_depth=1, **kw)
+    assert not ser.scan.drain_async
+    assert ser.scan.max_in_flight == 1
+    # inline drain: every write is exposed, nothing can hide
+    assert ser.scan.drain_overlap_s == 0.0
+    assert ser.scan.drain_wait_s >= ser.scan.drain_s
+    assert np.array_equal(np.asarray(ser.predictions),
+                          np.asarray(res.predictions))
+
+
+def test_live_buffer_probe_under_async_drain():
+    """The live-array probe, re-run against the ASYNC drain: with the
+    drain off the compute thread, still at most 2 page-block-shaped
+    device arrays ever exist (the drain worker holds [rows]-sized
+    predictions, never page buffers), on a DISK-tier source."""
+    from repro.db.operators import Operator, split_into_stages
+    F_odd = 19                       # unique shape: nothing else matches
+    x = np.arange(256 * F_odd, dtype=np.float32).reshape(256, F_odd)
+    store = TensorBlockStore(default_page_rows=16)
+    ds = store.put("probe", x, tier="disk")
+    batch_pages = 2
+    block_shape = (batch_pages * ds.page_rows, F_odd)
+    seen = []
+
+    def probe(state):
+        seen.append(sum(1 for a in jax.live_arrays()
+                        if tuple(a.shape) == block_shape
+                        and not a.is_deleted()))
+        return state
+
+    def udf(state):
+        state = dict(state)
+        state["pred"] = jnp.sum(state["x"], axis=1)   # keeps "x" threaded
+        return state
+
+    stages = split_into_stages(
+        [Operator("probe", probe), Operator("udf", udf),
+         Operator("write", lambda s: s, breaker=True)], jit=False)
+    out, _, stats = StreamingScanExecutor(stages).execute(ds, batch_pages)
+    assert stats.batches == len(seen) == 8
+    assert stats.drain_async
+    assert max(seen) <= MAX_IN_FLIGHT == 2, \
+        f"3+ page buffers were live: {seen}"
+    assert seen[-1] == 1             # no prefetch past the last batch
+    np.testing.assert_allclose(out, x.sum(axis=1), rtol=1e-6)
+
+
+def test_drain_worker_error_propagates():
+    """A failure inside the drain worker must surface on the compute
+    thread (after the join), not hang the queue or get swallowed."""
+    from repro.db.operators import Operator, split_into_stages
+
+    x = np.ones((128, 4), np.float32)
+    store = TensorBlockStore(default_page_rows=16)
+    ds = store.put("e", x, tier="disk")
+
+    def udf(state):
+        state = dict(state)
+        # wrong-sized prediction: the worker's slot write cannot broadcast
+        state["pred"] = jnp.zeros((3,), jnp.float32)
+        return state
+
+    stages = split_into_stages(
+        [Operator("udf", udf),
+         Operator("write", lambda s: s, breaker=True)], jit=False)
+    with pytest.raises(ValueError):
+        StreamingScanExecutor(stages).execute(ds, 2)
+
+
+def test_compute_error_shuts_drain_worker_down():
+    """The converse leak: a stage failing on the COMPUTE thread must
+    still shut the drain worker down (sentinel + join on the error
+    path), not strand the daemon thread in q.get() pinning the result
+    buffer for the process lifetime."""
+    import threading
+
+    from repro.db.operators import Operator, split_into_stages
+
+    x = np.ones((128, 4), np.float32)
+    store = TensorBlockStore(default_page_rows=16)
+    ds = store.put("c", x, tier="disk")
+    calls = []
+
+    def udf(state):
+        if len(calls) == 2:          # fail mid-stream, drain queue warm
+            raise RuntimeError("stage blew up")
+        calls.append(1)
+        state = dict(state)
+        state["pred"] = jnp.sum(state["x"], axis=1)
+        return state
+
+    stages = split_into_stages(
+        [Operator("udf", udf),
+         Operator("write", lambda s: s, breaker=True)], jit=False)
+    before = {t.name for t in threading.enumerate()}
+    with pytest.raises(RuntimeError, match="stage blew up"):
+        StreamingScanExecutor(stages).execute(ds, 2)
+    leaked = [t for t in threading.enumerate()
+              if t.name.startswith("scan-drain") and t.is_alive()]
+    assert not leaked, f"drain worker leaked: {leaked} (before: {before})"
+
+
+# ---------------------------------------------------------------------------
+# multi-device half of the parity grid
+# ---------------------------------------------------------------------------
+
+NDEV = len(jax.devices())
+needs_mesh = pytest.mark.skipif(
+    NDEV < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _mesh(n_data, n_model):
+    devs = np.array(jax.devices()[: n_data * n_model])
+    from jax.sharding import Mesh
+    return Mesh(devs.reshape(n_data, n_model), ("data", "model"))
+
+
+@needs_mesh
+@pytest.mark.parametrize("plan", ["udf", "rel"])
+@pytest.mark.parametrize("fmt,algo", [("dense", FUSED),
+                                      ("csr", SPARSE_ALGO)])
+def test_mesh_disk_tier_bitwise_parity(data_and_forest, plan, fmt, algo):
+    """Disk-tier mmap pages DMA'd under data_sharding through the
+    shard_map plans, drained async: bit-identical to the device-resident
+    mesh run."""
+    x, xs, forest = data_and_forest
+    mesh = _mesh(2, 4)
+    engine = _engine(_put_all_tiers(x, xs, mesh=mesh))
+    kw = dict(algorithm=algo, plan=plan, batch_pages=4)
+    rd = engine.infer(f"{fmt}@device", forest, **kw)
+    rk = engine.infer(f"{fmt}@disk", forest, **kw)
+    assert rk.tier == "disk" and rk.mesh_devices == 8
+    assert rk.scan.batches > 1 and rk.scan.max_in_flight == 2
+    assert rk.scan.drain_async
+    assert np.array_equal(np.asarray(rk.predictions),
+                          np.asarray(rd.predictions)), "f32 bitwise parity"

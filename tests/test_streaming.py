@@ -9,7 +9,10 @@ The contracts under test:
     tier, with per-tier nbytes accounting and catalog tiers;
   * the streaming executor keeps AT MOST 2 device page buffers in flight
     (the double-buffer invariant, asserted inside the executor and
-    reported via ``ScanStats.max_in_flight``);
+    reported via ``ScanStats.max_in_flight``) — since the drain moved to
+    a dedicated worker thread the probe here exercises the async path by
+    default; the disk-tier grid and the drain-accounting contracts live
+    in ``tests/test_disk_tier.py``;
   * tier migration (``store.move`` — eviction and promotion) and
     drop + re-page (different ``page_rows``) preserve predictions;
   * ``TensorBlockStore.drop`` sweeps dependent compiled-plan entries in
