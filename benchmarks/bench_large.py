@@ -84,7 +84,8 @@ def run(datasets=("higgs", "airline", "tpcxai"), trees=C.TREE_GRID,
 
 def run_stream(datasets=("higgs",), trees=C.FAST_TREE_GRID, scale=1.0,
                device_budget_bytes=None, host_budget_bytes=None,
-               algo=STREAM_ALGO, page_rows=512, tiers=("host", "disk")):
+               algo=STREAM_ALGO, page_rows=512, tiers=("host", "disk"),
+               inject_drain_death=False):
     """Out-of-core streaming scan vs the all-device-resident run, per
     off-device tier (host pages, then disk mmap pages).
 
@@ -93,6 +94,12 @@ def run_stream(datasets=("higgs",), trees=C.FAST_TREE_GRID, scale=1.0,
     section: past device AND host budgets, each exceeded >= 4x) or if
     streamed predictions diverge from the device-resident reference —
     this doubles as the CI smoke.
+
+    ``inject_drain_death=True`` is the fault smoke (docs/reliability.md):
+    each streamed run gets a ``FaultInjector`` that kills the async drain
+    worker on its first item, and the run RAISES if the scan did not
+    report the mid-flight fallback (``degraded_to_sync``) — parity is
+    already checked, so a silent or unreported degradation cannot pass.
     """
     rows, records = [], []
     for ds in datasets:
@@ -129,8 +136,20 @@ def run_stream(datasets=("higgs",), trees=C.FAST_TREE_GRID, scale=1.0,
                     # device-resident parity reference at SAME batching
                     serial = engine.infer(ds, forest, prefetch_depth=1,
                                           **kw)
+                    skw = {}
+                    if inject_drain_death:
+                        from repro.db.faults import FaultInjector
+                        skw["injector"] = FaultInjector().inject(
+                            "drain_worker", fail_at=1)
                     stream = engine.infer(ds, forest, prefetch_depth=2,
-                                          **kw)
+                                          **kw, **skw)
+                    if inject_drain_death and not (
+                            stream.scan.degraded_to_sync
+                            and stream.scan.faults_injected == 1):
+                        raise RuntimeError(
+                            f"{ds}/{plan}@{tier}: drain worker was killed "
+                            f"but the scan did not report degraded_to_sync"
+                            f" — unreported degradation")
                     ref = engine_dev.infer(
                         ds, forest, batch_pages=stream.scan.batch_pages,
                         **kw)
@@ -202,6 +221,11 @@ def main():
                          "dataset_bytes // 4)")
     ap.add_argument("--stream-only", action="store_true",
                     help="skip the classic section (the CI smoke)")
+    ap.add_argument("--inject-drain-death", action="store_true",
+                    help="fault smoke: kill the async drain worker on "
+                         "its first item in every streamed run; raise "
+                         "unless the scan reports the sync fallback AND "
+                         "keeps bitwise parity")
     ap.add_argument("--stream-out", default=BENCH_STREAM_JSON)
     args = ap.parse_args()
     trees = C.FAST_TREE_GRID if args.fast else C.TREE_GRID
@@ -212,8 +236,15 @@ def main():
         datasets=datasets, trees=trees,
         scale=min(args.scale, 0.25) if args.fast else args.scale,
         device_budget_bytes=args.device_budget_bytes,
-        host_budget_bytes=args.host_budget_bytes)
+        host_budget_bytes=args.host_budget_bytes,
+        inject_drain_death=args.inject_drain_death)
     C.print_rows(srows, header=args.stream_only)
+    if args.inject_drain_death:
+        # fault smoke: don't overwrite the clean trajectory file with
+        # degraded-path numbers
+        print("# fault smoke OK: drain worker killed mid-scan in every "
+              "streamed run; sync fallback reported, parity held")
+        return
     path = write_stream_json(records, args.stream_out)
     print(f"# streaming trajectory -> {path}  (smoke OK: host AND disk "
           f"tiers executed out-of-core, parity held)")

@@ -78,6 +78,22 @@ def main() -> None:
             f"budget={r['device_budget_bytes']}B"))
     print(f"# streaming trajectory -> {stream_path}")
 
+    from benchmarks import bench_faults
+    print("\n## Fault plane: zero-fault overhead + recovery latency")
+    frows, fault_records = bench_faults.run(
+        trees=trees[0] if args.fast else trees[-1],
+        scale=min(scale, 0.25), iters=3 if args.fast else 5)
+    C.print_rows(frows)
+    fault_path = bench_faults.write_faults_json(fault_records)
+    for r in fault_records:
+        wall = r["instrumented_wall_s"] if r["recovery_wall_s"] is None \
+            else r["recovery_wall_s"]
+        summary.append(C.csv_line(
+            f"faults/{r['scenario']}", wall,
+            f"overhead={r['overhead_fraction']:+.1%} "
+            f"vs_baseline={r['baseline_wall_s']}s"))
+    print(f"# fault trajectory -> {fault_path}")
+
     from benchmarks import bench_wide_sparse
     print("\n## Tab7-9: wide/sparse datasets (bosch, epsilon, criteo)")
     rows = bench_wide_sparse.run(trees=trees, scale=scale)

@@ -42,6 +42,39 @@ of drain work hidden behind compute.  ``prefetch_depth=1`` is the fully
 synchronous reference pipeline (inline drain, no worker), which the
 benchmarks use as the overlap baseline.
 
+RELIABILITY (``db/faults.py``, ``docs/reliability.md``): every fallible
+call in the loop is a named injection site wrapped in a bounded
+``RetryPolicy``, and recovery that retries cannot buy degrades down a
+ladder instead of failing hard:
+
+  ``disk_page_read``   retries, then RE-ENQUEUES the batch once at the
+                       end of the scan plan (slots are deterministic, so
+                       order never matters), then raises ``ScanFault``;
+  ``page_dma_in``      retries, then resubmits the batch at HALVED
+                       ``batch_pages`` (aligned to the data-axis unit —
+                       the OOM/transfer-fault ladder), down to one unit,
+                       then raises ``ScanFault``;
+  ``kernel_launch``    retries, then raises ``ScanFault``;
+  ``drain_copy_out``   retries on the worker, then surfaces as a
+                       ``ScanFault`` on the compute thread;
+  ``drain_worker``     worker-thread DEATH: the submit path uses a
+                       timeout-put that re-checks worker liveness (a
+                       dead worker + full queue can no longer deadlock
+                       the compute thread), recovers the worker's
+                       orphaned items, and falls back MID-SCAN to the
+                       synchronous ``prefetch_depth=1`` reference path —
+                       which is bit-identical, so the fallback is
+                       parity-safe (``degraded_to_sync``).
+
+A ``Deadline`` makes the scan budgeted: checked between batches (and
+before retry backoffs — cooperative, never preempting a jitted call),
+an expired budget stops the scan with ``deadline_hit`` set and the rows
+already drained intact; ``ForestQueryEngine.infer(deadline_s=...)``
+turns that into a partial ``QueryResult`` with a ``DegradedReport``.
+All of this lives in Python driver code between jitted calls — nothing
+is traced, so the zero-fault path stays the compiled hot path
+(measured in ``BENCH_faults.json``).
+
 At most ``MAX_IN_FLIGHT = 2`` device page buffers exist at any moment —
 asserted on every acquire, and reported as ``ScanStats.max_in_flight``.
 The drain worker holds per-batch PREDICTIONS ([rows]-sized, not page
@@ -55,8 +88,10 @@ runs.  ``tests/test_streaming.py`` keeps a pinned reproduction of the
 miscompile so a future jax bump can delete the note entirely; the host
 gather used here (per-shard copy + stitch) is not affected.
 
-See ``docs/architecture.md`` (tier ladder, drain pipeline) and
-``docs/benchmarks.md`` (how the stats surface in BENCH_stream.json).
+See ``docs/architecture.md`` (tier ladder, drain pipeline),
+``docs/reliability.md`` (fault sites, ladders, deadline contract) and
+``docs/benchmarks.md`` (how the stats surface in BENCH_stream.json /
+BENCH_faults.json).
 """
 
 from __future__ import annotations
@@ -71,6 +106,8 @@ from typing import Any, Iterator, Protocol, runtime_checkable
 import jax
 import numpy as np
 
+from repro.db.faults import (Deadline, DeadlineExceeded, FaultInjector,
+                             InjectedFault, RetryPolicy, ScanFault)
 from repro.db.operators import StageReport, run_stages
 
 __all__ = ["ScanSource", "ScanStats", "StreamingScanExecutor",
@@ -86,6 +123,13 @@ MAX_IN_FLIGHT = 2
 #: query engine caps the default batch at this many bytes per in-flight
 #: buffer.
 DEFAULT_STREAM_BATCH_BYTES = 64 << 20
+
+#: how long one ``queue.put`` attempt blocks before the submit path
+#: re-checks drain-worker liveness.  The put still wakes IMMEDIATELY
+#: when the worker frees a slot (condition notify) — the timeout only
+#: bounds how long a DEAD worker with a full queue can stall the
+#: compute thread before the sync-drain fallback kicks in.
+DRAIN_PUT_TIMEOUT_S = 0.05
 
 
 @runtime_checkable
@@ -126,13 +170,13 @@ class ScanSource(Protocol):
 class ScanStats:
     """Per-query streaming telemetry (attached to ``QueryResult.scan``).
 
-    Every field is documented, with its BENCH_stream.json counterpart,
-    in ``docs/benchmarks.md``.
+    Every field is documented, with its BENCH_stream.json /
+    BENCH_faults.json counterpart, in ``docs/benchmarks.md``.
     """
 
     tier: str                        # source tier the scan ran against
-    batches: int                     # page batches executed
-    batch_pages: int                 # pages per (full) batch
+    batches: int                     # page batches actually executed
+    batch_pages: int                 # pages per (full) batch as planned
     prefetch_depth: int              # 1 = synchronous, 2 = double-buffered
     max_in_flight: int = 0           # peak live device page buffers (<= 2)
     bytes_streamed: int = 0          # off-device->device bytes shipped
@@ -148,6 +192,16 @@ class ScanStats:
     drain_async: bool = False        # drain ran on a dedicated worker
     pinned_staging: bool = False     # D2H staged through pinned host mem
     wall_s: float = 0.0              # whole scan loop
+    # -- reliability accounting (docs/reliability.md) -----------------------
+    retries: int = 0                 # retry re-attempts across all sites
+    faults_injected: int = 0         # injector fires observed this scan
+    degraded_to_sync: bool = False   # drain-worker death -> mid-scan
+    #                                  fallback to the synchronous path
+    batch_resubmits: int = 0         # batches re-enqueued (disk-read
+    #                                  ladder) or resubmitted at halved
+    #                                  size (device-transfer ladder)
+    deadline_hit: bool = False       # scan stopped early on its deadline
+    #                                  (the result is a PARTIAL)
 
     @property
     def drain_overlap_s(self) -> float:
@@ -191,21 +245,39 @@ class _ResultSink:
     """The preallocated host result buffer + the drain that fills it.
 
     ``write`` completes one batch's D2H (optionally staging through a
-    pinned host buffer) and stores the rows at their deterministic slot.
-    ``drain_loop`` is the dedicated worker thread's body: it consumes
-    (first_page, num_pages, prediction) items until the ``None`` sentinel,
-    never letting one batch's failure wedge the queue (the error is kept
-    and re-raised on the compute thread after the join).
+    pinned host buffer) and stores the rows at their deterministic slot
+    — retried under the ``drain_copy_out`` site (the slot write is
+    idempotent, so a retried write is parity-safe).  ``drain_loop`` is
+    the dedicated worker thread's body: it consumes (first_page,
+    num_pages, prediction) items until the ``None`` sentinel, never
+    letting one batch's failure wedge the queue (a write error is kept
+    and re-raised on the compute thread; an injected ``drain_worker``
+    fault models the THREAD dying — the worker parks the item it was
+    holding in ``orphans`` and exits, and the compute thread recovers
+    it through ``drain_pending`` when the sync fallback kicks in).
     """
 
     def __init__(self, total_rows: int, page_rows: int,
-                 stats: ScanStats, pinned=None):
+                 stats: ScanStats, pinned=None, *,
+                 injector: FaultInjector | None = None,
+                 policy: RetryPolicy | None = None,
+                 track_mask: bool = False):
         self.total_rows = total_rows
         self.page_rows = page_rows
         self.stats = stats
         self.pinned = pinned
+        self.injector = injector
+        self.policy = policy
         self.result: np.ndarray | None = None    # allocated at first write
         self.error: BaseException | None = None
+        self.dead = False                # drain_worker fault: thread died
+        self.orphans: list = []          # items a dying worker parked
+        self.rows_written = 0            # padded rows landed so far
+        # which rows landed — only tracked for deadline-budgeted scans
+        # (the partial result's DegradedReport needs the exact mask; the
+        # unbudgeted hot path skips the bookkeeping)
+        self.mask: np.ndarray | None = (
+            np.zeros(total_rows, bool) if track_mask else None)
 
     def wants_pinned(self, pred) -> bool:
         """Pinned staging applies to single-device predictions only:
@@ -214,7 +286,7 @@ class _ResultSink:
                 and getattr(pred, "sharding", None) is not None
                 and len(pred.sharding.device_set) == 1)
 
-    def write(self, first_page: int, num_pages: int, pred) -> None:
+    def _write_once(self, first_page: int, num_pages: int, pred) -> None:
         t0 = time.perf_counter()
         if self.wants_pinned(pred):
             # D2H DMA into pinned staging; np.asarray of a pinned_host
@@ -226,10 +298,32 @@ class _ResultSink:
             self.stats.pinned_staging = True
         host = np.asarray(pred)                  # per-shard copy + stitch
         if self.result is None:
-            self.result = np.empty(self.total_rows, host.dtype)
+            fill = (np.full(self.total_rows, np.nan, host.dtype)
+                    if self.mask is not None
+                    else np.empty(self.total_rows, host.dtype))
+            self.result = fill
         lo = first_page * self.page_rows
-        self.result[lo: lo + num_pages * self.page_rows] = host.reshape(-1)
+        hi = lo + num_pages * self.page_rows
+        self.result[lo:hi] = host.reshape(-1)
+        if self.mask is not None:
+            self.mask[lo:hi] = True
+        self.rows_written += hi - lo
         self.stats.drain_s += time.perf_counter() - t0
+
+    def _count_retry(self):
+        self.stats.retries += 1
+
+    def write(self, first_page: int, num_pages: int, pred) -> None:
+        """One batch's drain, guarded at the ``drain_copy_out`` site."""
+        if self.policy is None and self.injector is None:
+            return self._write_once(first_page, num_pages, pred)
+        if self.policy is None:
+            self.injector.fire("drain_copy_out")
+            return self._write_once(first_page, num_pages, pred)
+        return self.policy.run(
+            lambda: self._write_once(first_page, num_pages, pred),
+            site="drain_copy_out", injector=self.injector,
+            on_retry=self._count_retry)
 
     def drain_loop(self, q: queue_mod.Queue) -> None:
         while True:
@@ -237,6 +331,16 @@ class _ResultSink:
             try:
                 if item is None:
                     return
+                if self.injector is not None:
+                    try:
+                        self.injector.fire("drain_worker")
+                    except InjectedFault:
+                        # the THREAD dies here (not a write error): park
+                        # the item so the compute thread can recover it,
+                        # then exit without draining the rest
+                        self.dead = True
+                        self.orphans.append(item)
+                        return
                 if self.error is None:           # fail fast, keep draining
                     try:
                         self.write(*item)
@@ -244,6 +348,27 @@ class _ResultSink:
                         self.error = e           # on the compute thread
             finally:
                 q.task_done()
+
+    def drain_pending(self, q: queue_mod.Queue | None) -> None:
+        """Compute-thread recovery: write everything a dead worker left
+        behind — its parked orphan plus any queued-but-unprocessed items
+        (and swallow the stranded sentinel).  Idempotent and safe on a
+        healthy shutdown (both lists empty)."""
+        items = list(self.orphans)
+        self.orphans = []
+        if q is not None:
+            while True:
+                try:
+                    items.append(q.get_nowait())
+                except queue_mod.Empty:
+                    break
+        for it in items:
+            if it is None or self.error is not None:
+                continue
+            try:
+                self.write(*it)
+            except BaseException as e:           # noqa: BLE001 — re-raised
+                self.error = e                   # by the caller
 
 
 class StreamingScanExecutor:
@@ -253,10 +378,21 @@ class StreamingScanExecutor:
     One instance per query execution; ``stages`` is the compiled stage
     list (``db/operators.Stage``) whose final state carries the per-batch
     predictions under ``result_key``.
+
+    ``injector`` / ``retry_policy`` / ``deadline`` opt the scan into the
+    reliability layer (``db/faults.py``); all three default off, and the
+    fault-free path with them off is byte-for-byte the old loop.
+    ``min_batch_pages`` is the floor of the device-transfer halving
+    ladder (the query engine passes the mesh data-axis unit so halved
+    batches stay shard_map-divisible).
     """
 
     def __init__(self, stages, *, sharding=None, prefetch_depth: int = 2,
-                 result_key: str = "pred"):
+                 result_key: str = "pred",
+                 injector: FaultInjector | None = None,
+                 retry_policy: RetryPolicy | None = None,
+                 deadline: Deadline | None = None,
+                 min_batch_pages: int = 1):
         if not 1 <= prefetch_depth <= MAX_IN_FLIGHT:
             raise ValueError(
                 f"prefetch_depth must be in [1, {MAX_IN_FLIGHT}], "
@@ -265,6 +401,16 @@ class StreamingScanExecutor:
         self.sharding = sharding          # store.data_sharding() (or None)
         self.prefetch_depth = prefetch_depth
         self.result_key = result_key
+        self.injector = injector
+        # an armed injector with no explicit policy still recovers: the
+        # default policy is the documented 3-attempt/backoff contract
+        self.retry_policy = retry_policy if retry_policy is not None \
+            else (RetryPolicy() if injector is not None else None)
+        self.deadline = deadline
+        self.min_batch_pages = max(1, int(min_batch_pages))
+        # row mask of the last execute() when it hit its deadline (the
+        # engine turns it into the DegradedReport); None otherwise
+        self.last_mask: np.ndarray | None = None
 
     # -- batch plan ---------------------------------------------------------
     @staticmethod
@@ -272,9 +418,37 @@ class StreamingScanExecutor:
                    ) -> Iterator[tuple[int, int, int]]:
         """Deterministic (batch_index, first_page, num_pages) plan — the
         F3 batching loop AND the replay unit: batch k always covers the
-        same pages, whatever tier they live on."""
+        same pages, whatever tier they live on.  Under the fault ladders
+        the plan is only ever REORDERED or SPLIT (re-enqueue, halving) —
+        every page span still lands at its deterministic slot."""
         for k, first in enumerate(range(0, num_pages, batch_pages)):
             yield k, first, min(batch_pages, num_pages - first)
+
+    # -- guarded sites ------------------------------------------------------
+    def _guard(self, fn, site: str, stats: ScanStats):
+        """Run ``fn`` at injection site ``site`` under the retry policy.
+        The zero-instrumentation path (no injector, no policy) is a
+        direct call — nothing on the hot path but this dispatch."""
+        if self.retry_policy is None:
+            if self.injector is not None:
+                self.injector.fire(site)
+            return fn()
+
+        def count():
+            stats.retries += 1
+
+        return self.retry_policy.run(fn, site=site, injector=self.injector,
+                                     on_retry=count, deadline=self.deadline)
+
+    @property
+    def _retryable(self) -> tuple:
+        return (self.retry_policy.retryable if self.retry_policy is not None
+                else (InjectedFault, OSError))
+
+    @property
+    def _attempts(self) -> int:
+        return (self.retry_policy.max_attempts
+                if self.retry_policy is not None else 1)
 
     # -- execution ----------------------------------------------------------
     def execute(self, source: ScanSource, batch_pages: int
@@ -287,25 +461,49 @@ class StreamingScanExecutor:
         With ``prefetch_depth=2`` the buffer is filled by a dedicated
         drain worker thread, so batch i−1's D2H never blocks batch i's
         kernel stages; depth 1 drains inline (the synchronous reference).
+
+        Failure semantics: transient faults at the injection sites are
+        retried and degraded down the ladders (see the module
+        docstring); recovery is bit-identical.  Exhausted ladders raise
+        a structured ``ScanFault``; an expired ``deadline`` returns the
+        PARTIAL buffer with ``stats.deadline_hit`` set and
+        ``self.last_mask`` marking the rows that landed.
         """
         R = source.page_rows
-        plan = list(self.batch_plan(source.num_pages, batch_pages))
-        stats = ScanStats(tier=source.tier, batches=len(plan),
+        # (first_page, num_pages) spans; a deque because the fault
+        # ladders re-enqueue (append) and split (appendleft) mid-scan
+        pending: deque[tuple[int, int]] = deque(
+            (first, n) for _, first, n in
+            self.batch_plan(source.num_pages, batch_pages))
+        n_planned = len(pending)
+        stats = ScanStats(tier=source.tier, batches=0,
                           batch_pages=batch_pages,
                           prefetch_depth=self.prefetch_depth)
         reports: list[StageReport] = []
         bufs: deque[_InFlight] = deque()   # acquired, not yet computed
         live = 0                           # live device page buffers
-        next_i = 0
+        batch_idx = 0
+        resubmitted: set[tuple[int, int]] = set()   # disk-ladder once-only
+        fired0 = self.injector.total_fired if self.injector else 0
+        deadline = self.deadline
+        retryable = self._retryable
         t_wall = time.perf_counter()
 
         # the async drain rides with double-buffering; depth 1 keeps the
         # drain inline as the fully synchronous reference pipeline
-        async_drain = self.prefetch_depth >= 2 and len(plan) > 1
+        async_drain = self.prefetch_depth >= 2 and n_planned > 1
+        # effective depth can DEGRADE mid-scan (drain-worker death ->
+        # the synchronous reference path); the stats keep the requested
+        # depth and flag the degradation separately
+        depth = self.prefetch_depth
         sink = _ResultSink(source.num_pages * R, R, stats,
-                           pinned=_pinned_host_sharding())
+                           pinned=_pinned_host_sharding(),
+                           injector=self.injector,
+                           policy=self.retry_policy,
+                           track_mask=deadline is not None)
         drain_q: queue_mod.Queue | None = None
         worker: threading.Thread | None = None
+        drain_active = False
         if async_drain:
             stats.drain_async = True
             # bounded: backpressure caps how many [rows]-sized prediction
@@ -315,22 +513,99 @@ class StreamingScanExecutor:
                                       args=(drain_q,),
                                       name="scan-drain", daemon=True)
             worker.start()
+            drain_active = True
 
-        def acquire():
-            nonlocal live, next_i
-            k, first, n = plan[next_i]
-            next_i += 1
-            block = source.page_slice(first, n)
+        def put_drain(item) -> bool:
+            """Timeout-put that re-checks worker liveness: a dead worker
+            with a full queue can no longer wedge the compute thread in
+            a blocking ``put`` forever (the latent deadlock).  Returns
+            False when the worker is dead — the caller degrades to the
+            synchronous drain."""
+            while True:
+                if sink.dead or not worker.is_alive():
+                    return False
+                try:
+                    drain_q.put(item, timeout=DRAIN_PUT_TIMEOUT_S)
+                    return True
+                except queue_mod.Full:
+                    continue
+
+        def degrade_to_sync():
+            """Drain-worker death ladder: recover the worker's orphaned
+            items on the compute thread and continue as the synchronous
+            ``prefetch_depth=1`` reference path — bit-identical, so the
+            mid-scan switch is parity-safe."""
+            nonlocal drain_active, depth
+            drain_active = False
+            depth = 1
+            stats.degraded_to_sync = True
+            worker.join(timeout=5.0)
+            sink.drain_pending(drain_q)
+
+        def try_acquire() -> bool:
+            """Acquire the next pending span through the disk-read and
+            device-transfer sites.  Returns False when a fault ladder
+            consumed the attempt (the span was re-enqueued or split) —
+            the caller just loops."""
+            nonlocal live
+            first, n = pending[0]
+            try:
+                if source.tier == "disk":
+                    block = self._guard(
+                        lambda: source.page_slice(first, n),
+                        "disk_page_read", stats)
+                else:
+                    block = source.page_slice(first, n)
+            except DeadlineExceeded:
+                raise
+            except retryable as e:
+                # disk-read ladder: re-enqueue the batch ONCE at the end
+                # of the plan (deterministic slots: order is irrelevant),
+                # then fail structured
+                pending.popleft()
+                if (first, n) not in resubmitted:
+                    resubmitted.add((first, n))
+                    pending.append((first, n))
+                    stats.batch_resubmits += 1
+                    return False
+                raise ScanFault("disk_page_read",
+                                attempts=2 * self._attempts,
+                                rows_completed=min(sink.rows_written,
+                                                   source.num_rows),
+                                cause=e) from e
             t0 = time.perf_counter()
-            block = source.to_device(block, self.sharding)  # async DMA
+            try:
+                block = self._guard(
+                    lambda: source.to_device(block, self.sharding),
+                    "page_dma_in", stats)             # async DMA
+            except DeadlineExceeded:
+                raise
+            except retryable as e:
+                # device-transfer ladder: resubmit at HALVED batch size
+                # (aligned to the data-axis unit) before erroring — the
+                # OOM answer: two half-batches fit where one batch faulted
+                unit = self.min_batch_pages
+                pending.popleft()
+                if n > unit:
+                    n1 = max(unit, (n // 2) // unit * unit)
+                    pending.appendleft((first + n1, n - n1))
+                    pending.appendleft((first, n1))
+                    stats.batch_resubmits += 1
+                    return False
+                raise ScanFault("page_dma_in", attempts=self._attempts,
+                                rows_completed=min(sink.rows_written,
+                                                   source.num_rows),
+                                cause=e) from e
             stats.transfer_issue_s += time.perf_counter() - t0
+            pending.popleft()
             if source.tier != "device":
                 stats.bytes_streamed += _block_nbytes(block)
             live += 1
             stats.max_in_flight = max(stats.max_in_flight, live)
             assert live <= MAX_IN_FLIGHT, \
                 f"{live} device page buffers in flight (max {MAX_IN_FLIGHT})"
-            bufs.append(_InFlight(k, first, n, block))
+            bufs.append(_InFlight(len(resubmitted) + live, first, n, block))
+            return True
 
         def submit(first: int, n: int, pred):
             """Hand batch i's prediction to the drain.  The D2H copy is
@@ -343,57 +618,108 @@ class StreamingScanExecutor:
             if not sink.wants_pinned(pred) \
                     and hasattr(pred, "copy_to_host_async"):
                 pred.copy_to_host_async()
-            if async_drain:
-                t0 = time.perf_counter()
-                drain_q.put((first, n, pred))
-                stats.drain_wait_s += time.perf_counter() - t0
-            else:
-                t0 = time.perf_counter()
+            t0 = time.perf_counter()
+            if drain_active:
+                if put_drain((first, n, pred)):
+                    stats.drain_wait_s += time.perf_counter() - t0
+                    return
+                degrade_to_sync()        # dead worker: recover + go sync
+            try:
                 sink.write(first, n, pred)
+            except retryable as e:
+                raise ScanFault("drain_copy_out", attempts=self._attempts,
+                                rows_completed=min(sink.rows_written,
+                                                   source.num_rows),
+                                cause=e) from e
+            finally:
                 stats.drain_wait_s += time.perf_counter() - t0
 
         try:
-            while next_i < len(plan) or bufs:
+            while pending or bufs:
                 if sink.error is not None:
-                    break                     # a drained batch already
-                #                               failed: don't pay for the
-                #                               rest of the scan first
-                if not bufs:
-                    acquire()
-                cur = bufs.popleft()
-                # batch i+1: issue its page DMA while batch i computes
-                while len(bufs) + 1 < self.prefetch_depth \
-                        and next_i < len(plan):
-                    acquire()
-                t0 = time.perf_counter()
-                jax.block_until_ready(cur.block)
-                stats.transfer_wait_s += time.perf_counter() - t0
-                t0 = time.perf_counter()
-                state, reps = run_stages(self.stages, {"x": cur.block})
-                stats.compute_s += time.perf_counter() - t0
-                reports.extend(reps)
-                submit(cur.first_page, cur.num_pages,
-                       state[self.result_key])
-                # release the page buffer NOW: some plans thread "x"
-                # through to the final stage output, so dropping `state`
-                # (not just cur.block) is what actually frees the device
-                # pages — else a third buffer would be alive during the
-                # next prefetch
-                state = None
-                cur.block = None              # at most 2 ever live
-                live -= 1
+                    break                 # a drained batch already
+                #                           failed: don't pay for the
+                #                           rest of the scan first
+                if deadline is not None and deadline.expired:
+                    stats.deadline_hit = True
+                    break                 # budget spent: keep what landed
+                try:
+                    if not bufs:
+                        if not try_acquire():
+                            continue      # ladder adjusted the plan
+                    cur = bufs.popleft()
+                    # batch i+1: issue its page DMA while batch i computes
+                    while len(bufs) + 1 < depth and pending:
+                        if not try_acquire():
+                            break         # ladder adjusted the plan
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(cur.block)
+                    stats.transfer_wait_s += time.perf_counter() - t0
+                    t0 = time.perf_counter()
+                    try:
+                        state, reps = self._guard(
+                            lambda: run_stages(self.stages,
+                                               {"x": cur.block}),
+                            "kernel_launch", stats)
+                    except retryable as e:
+                        raise ScanFault(
+                            "kernel_launch", attempts=self._attempts,
+                            rows_completed=min(sink.rows_written,
+                                               source.num_rows),
+                            cause=e) from e
+                    stats.compute_s += time.perf_counter() - t0
+                    reports.extend(reps)
+                    stats.batches += 1
+                    batch_idx += 1
+                    submit(cur.first_page, cur.num_pages,
+                           state[self.result_key])
+                    # release the page buffer NOW: some plans thread "x"
+                    # through to the final stage output, so dropping
+                    # `state` (not just cur.block) is what actually frees
+                    # the device pages — else a third buffer would be
+                    # alive during the next prefetch
+                    state = None
+                    cur.block = None              # at most 2 ever live
+                    live -= 1
+                except DeadlineExceeded:
+                    # budget expired inside a retry loop: same graceful
+                    # exit as the between-batches check
+                    stats.deadline_hit = True
+                    break
         finally:
             # shut the worker down on EVERY exit: a failing stage (or
             # the in-flight assert) must not strand the daemon thread in
-            # q.get() pinning the result buffer for the process lifetime
+            # q.get() pinning the result buffer for the process lifetime.
+            # put_drain (not a blocking put) so a dead worker + full
+            # queue cannot deadlock the shutdown either; drain_pending
+            # then recovers anything a dead worker left behind.
             if async_drain:
                 t0 = time.perf_counter()
-                drain_q.put(None)             # sentinel: no more batches
-                worker.join()
+                if drain_active:
+                    put_drain(None)       # sentinel: no more batches
+                worker.join(timeout=5.0)
+                if sink.dead:
+                    stats.degraded_to_sync = True
+                sink.drain_pending(drain_q)
                 stats.drain_wait_s += time.perf_counter() - t0
-        if async_drain and sink.error is not None:
-            raise sink.error
+        if self.injector is not None:
+            stats.faults_injected = self.injector.total_fired - fired0
+        if sink.error is not None:
+            e = sink.error
+            if isinstance(e, retryable):
+                raise ScanFault("drain_copy_out", attempts=self._attempts,
+                                rows_completed=min(sink.rows_written,
+                                                   source.num_rows),
+                                cause=e) from e
+            raise e
 
         stats.wall_s = time.perf_counter() - t_wall
-        assert sink.result is not None, "scan produced no batches"
+        if sink.result is None:
+            assert stats.deadline_hit, "scan produced no batches"
+            # deadline expired before the first batch landed: an all-NaN
+            # partial (rows_scored == 0) is still the graceful contract
+            sink.result = np.full(source.num_pages * R, np.nan, np.float32)
+        self.last_mask = (sink.mask[: source.num_rows]
+                          if stats.deadline_hit and sink.mask is not None
+                          else None)
         return sink.result[: source.num_rows], reports, stats

@@ -1,0 +1,336 @@
+"""Reliability layer for the scan/serve data plane: fault injection,
+bounded retries, deadlines, and structured scan faults.
+
+The paper's motivating deployments (fraud gating, ranking, admission)
+put the forest on the REQUEST path, where a stalled DMA or a dead drain
+worker is an outage, not a slow benchmark.  The training side already
+has a fault discipline (``train/fault.py``: step-level injection,
+restart invariants); this module ports it to inference, where the unit
+of failure is not a training step but a call at one of the data plane's
+NAMED INJECTION SITES:
+
+  ``page_dma_in``     host/disk page block -> device transfer
+                      (``StreamingScanExecutor`` acquire, loader
+                      transfer paths)
+  ``drain_copy_out``  device predictions -> host result buffer
+                      (the drain worker's per-batch write)
+  ``disk_page_read``  reading disk-tier mmap pages (executor
+                      ``page_slice`` on the disk tier, ``store.move``
+                      off the disk tier)
+  ``kernel_launch``   running a batch's compiled kernel stages
+  ``drain_worker``    the dedicated ``scan-drain`` worker thread itself
+                      (models THREAD DEATH, not a recoverable write
+                      error — the ladder's answer is mid-scan fallback
+                      to the synchronous drain, not a retry)
+
+``FaultInjector`` arms sites deterministically (fire at the Nth call)
+or probabilistically (seeded, reproducible); ``RetryPolicy`` bounds the
+recovery attempts around every site with exponential backoff and
+DETERMINISTIC jitter (hash-derived, replay-stable — no wall-clock or
+process-salt randomness, mirroring the determinism rules of
+``train/data.py``).  ``Deadline`` is the cooperative per-scan budget:
+checked between batches and before every backoff sleep, never
+preempting a jitted call mid-flight (an honest contract on XLA — the
+same reason stage timing is measured at stage boundaries).
+
+Recovery that cannot succeed surfaces as a structured ``ScanFault``
+carrying the site, attempt count, and rows completed — never a silent
+wrong answer, never a hang.  See ``docs/reliability.md`` for the
+degradation ladders built on top of these primitives in
+``db/executor.py`` / ``db/query.py``.
+
+Everything here runs in PYTHON DRIVER CODE between jitted calls: no
+injection point, retry wrapper, or deadline check is ever traced into a
+stage, so the zero-fault hot path stays the compiled path
+(``BENCH_faults.json`` records the measured overhead; the acceptance
+bound is 5%).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+__all__ = ["FAULT_SITES", "InjectedFault", "ScanFault", "DeadlineExceeded",
+           "FaultInjector", "RetryPolicy", "Deadline", "DegradedReport"]
+
+#: the named injection points of the scan/serve data plane
+FAULT_SITES = ("page_dma_in", "drain_copy_out", "disk_page_read",
+               "kernel_launch", "drain_worker")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by ``FaultInjector.fire`` at an armed site — the synthetic
+    stand-in for a transfer error / failed read / kernel launch failure.
+    Retry policies treat it as retryable by default."""
+
+    def __init__(self, site: str, call: int):
+        super().__init__(f"injected fault at site {site!r} (call {call})")
+        self.site = site
+        self.call = call
+
+
+class ScanFault(RuntimeError):
+    """A scan-path failure that exhausted its recovery ladder.
+
+    Structured: carries the fault ``site``, how many ``attempts`` the
+    retry policy made at that site, how many ``rows_completed`` had
+    already landed in the result buffer, and the underlying ``cause``.
+    This is the data plane's ONLY terminal error shape — callers never
+    have to parse message strings to find out what died where.
+    """
+
+    def __init__(self, site: str, *, attempts: int, rows_completed: int,
+                 cause: BaseException | None = None,
+                 detail: str = ""):
+        msg = (f"scan fault at site {site!r} after {attempts} attempt(s), "
+               f"{rows_completed} rows completed")
+        if detail:
+            msg += f": {detail}"
+        if cause is not None:
+            msg += f" (cause: {cause!r})"
+        super().__init__(msg)
+        self.site = site
+        self.attempts = attempts
+        self.rows_completed = rows_completed
+        self.cause = cause
+
+
+class DeadlineExceeded(Exception):
+    """Internal control-flow signal: a deadline expired inside a retry
+    loop.  The executor converts it into a graceful partial result
+    (``deadline_hit``), so it should never escape to callers."""
+
+    def __init__(self, site: str, cause: BaseException | None = None):
+        super().__init__(f"deadline exceeded during retries at {site!r}")
+        self.site = site
+        self.cause = cause
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _SiteRule:
+    """Arming state for one site."""
+
+    fail_at: int | None = None       # fire at the Nth call (1-based)
+    probability: float = 0.0         # else fire with this probability
+    times: int = 1                   # how many fires before disarming
+    fired: int = 0                   # fires so far
+    rng: Any = None                  # seeded per-site generator
+
+
+class FaultInjector:
+    """Site-based fault injection for the scan/serve data plane.
+
+    Modeled on ``train/fault.py``'s ``FailureInjector``, generalized
+    from "raise at step N" to named sites with two deterministic modes:
+
+      * ``inject(site, fail_at=N)`` — fire at exactly the Nth call of
+        that site (1-based), ``times`` consecutive calls starting there;
+      * ``inject(site, probability=p)`` — fire each call with
+        probability ``p`` from a generator seeded by (seed, site), so a
+        given (seed, call sequence) always fires at the same calls.
+
+    ``fire(site)`` is placed at each injection point by the production
+    code; it counts the call and raises ``InjectedFault`` when armed.
+    A disarmed injector (or ``injector=None`` at the call sites) costs
+    one attribute check per site call — nothing is traced.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self.calls: dict[str, int] = {s: 0 for s in FAULT_SITES}
+        self._rules: dict[str, _SiteRule] = {}
+
+    def inject(self, site: str, *, fail_at: int | None = None,
+               probability: float | None = None,
+               times: int = 1) -> "FaultInjector":
+        """Arm ``site``.  Exactly one of ``fail_at`` / ``probability``.
+        Returns self so arming chains."""
+        if site not in FAULT_SITES:
+            raise ValueError(f"unknown fault site {site!r}; "
+                             f"expected one of {FAULT_SITES}")
+        if (fail_at is None) == (probability is None):
+            raise ValueError("arm with exactly one of fail_at=/probability=")
+        rule = _SiteRule(fail_at=fail_at, times=times)
+        if probability is not None:
+            rule.probability = float(probability)
+            sd = int.from_bytes(hashlib.blake2s(
+                f"{self.seed}:{site}".encode(), digest_size=8).digest(),
+                "big")
+            rule.rng = np.random.default_rng(sd)
+        self._rules[site] = rule
+        return self
+
+    def fire(self, site: str) -> None:
+        """Count one call at ``site``; raise ``InjectedFault`` if armed."""
+        self.calls[site] = call = self.calls.get(site, 0) + 1
+        rule = self._rules.get(site)
+        if rule is None or rule.fired >= rule.times:
+            return
+        if rule.fail_at is not None:
+            hit = rule.fail_at <= call < rule.fail_at + rule.times
+        else:
+            hit = bool(rule.rng.random() < rule.probability)
+        if hit:
+            rule.fired += 1
+            raise InjectedFault(site, call)
+
+    @property
+    def total_fired(self) -> int:
+        """Faults fired so far, across every site (the executor
+        snapshots this around a scan to fill ``ScanStats
+        .faults_injected``)."""
+        return sum(r.fired for r in self._rules.values())
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+
+class Deadline:
+    """A cooperative wall-clock budget for one scan / query.
+
+    Checked at batch boundaries and before backoff sleeps — never
+    preempting a jitted call (XLA offers no safe mid-kernel cancel, so
+    pretending otherwise would be dishonest accounting).  ``None``
+    budget means no deadline (``expired`` is always False).
+    """
+
+    def __init__(self, budget_s: float | None,
+                 start: float | None = None):
+        self.budget_s = budget_s
+        self.start = time.perf_counter() if start is None else start
+
+    @property
+    def expired(self) -> bool:
+        return (self.budget_s is not None
+                and time.perf_counter() - self.start >= self.budget_s)
+
+    def remaining(self) -> float:
+        if self.budget_s is None:
+            return float("inf")
+        return max(0.0, self.budget_s - (time.perf_counter() - self.start))
+
+
+# ---------------------------------------------------------------------------
+# retries
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retries with exponential backoff and deterministic jitter.
+
+    ``run(fn, site=...)`` calls ``fn`` up to ``max_attempts`` times,
+    sleeping ``backoff_base_s * backoff_factor**k`` (capped at
+    ``max_backoff_s``) plus a hash-derived jitter between attempts.
+    The jitter is a pure function of (site, attempt) — replay-stable,
+    no process-salted ``hash()`` and no wall-clock entropy — so two
+    runs of the same failing scan back off identically.
+
+    Budgets: ``per_call_budget_s`` bounds the TOTAL time one logical
+    call may spend across its attempts (a stuck site stops retrying
+    even with attempts left); a ``deadline`` passed to ``run`` bounds
+    the whole scan — an expired deadline stops the retry loop with
+    ``DeadlineExceeded`` so the caller can degrade to a partial result
+    instead of erroring.
+
+    Only ``retryable`` exception types are retried; anything else
+    propagates immediately (a shape error is a bug, not a fault).
+    The first attempt is a plain call — a policy wrapped around a
+    healthy site adds one function call and one try frame, nothing
+    else, which is what keeps the zero-fault overhead inside the 5%
+    acceptance bound.
+    """
+
+    max_attempts: int = 3
+    backoff_base_s: float = 0.001
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 0.05
+    jitter_frac: float = 0.25
+    per_call_budget_s: float | None = None
+    retryable: tuple = (InjectedFault, OSError)
+
+    def backoff_s(self, site: str, attempt: int) -> float:
+        """Deterministic backoff before retry ``attempt`` (1-based)."""
+        base = min(self.backoff_base_s * self.backoff_factor
+                   ** (attempt - 1), self.max_backoff_s)
+        h = int.from_bytes(hashlib.blake2s(
+            f"{site}:{attempt}".encode(), digest_size=4).digest(), "big")
+        return base * (1.0 + self.jitter_frac * (h / 0xFFFFFFFF))
+
+    def run(self, fn: Callable[[], Any], *, site: str,
+            injector: FaultInjector | None = None,
+            on_retry: Callable[[], None] | None = None,
+            deadline: Deadline | None = None) -> Any:
+        """Run ``fn`` under this policy at ``site``.
+
+        ``injector.fire(site)`` is invoked before each attempt (the
+        injection point IS the guarded call).  ``on_retry`` is called
+        once per re-attempt (the executor counts ``ScanStats.retries``
+        there).  Exhausted attempts re-raise the last cause — callers
+        wrap it into a ``ScanFault`` with their own context (rows
+        completed, ladder position).
+        """
+        t0 = time.perf_counter()
+        attempt = 0
+        while True:
+            attempt += 1
+            try:
+                if injector is not None:
+                    injector.fire(site)
+                return fn()
+            except self.retryable as e:
+                if attempt >= self.max_attempts:
+                    raise
+                if (self.per_call_budget_s is not None
+                        and time.perf_counter() - t0
+                        >= self.per_call_budget_s):
+                    raise
+                if deadline is not None and deadline.expired:
+                    raise DeadlineExceeded(site, cause=e)
+                if on_retry is not None:
+                    on_retry()
+                pause = self.backoff_s(site, attempt)
+                if deadline is not None:
+                    pause = min(pause, deadline.remaining())
+                if pause > 0:
+                    time.sleep(pause)
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation reporting
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DegradedReport:
+    """What a PARTIAL query result is missing and why.
+
+    Attached to ``QueryResult.degraded`` when ``infer(deadline_s=...)``
+    ran out of budget mid-scan: the rows that WERE scored are exact
+    (bit-identical to an unbounded run — the scan's page↔batch mapping
+    is deterministic, so a completed batch is a completed batch), the
+    rows that were not carry NaN in ``predictions``, and ``row_mask``
+    says which is which.
+    """
+
+    rows_scored: int
+    rows_missing: int
+    cause: str                        # "deadline" (the only ladder that
+    #                                   returns partials today)
+    deadline_s: float | None = None
+    row_mask: np.ndarray | None = None   # [num_rows] bool, True = scored
+
+    def __bool__(self) -> bool:
+        return self.rows_missing > 0

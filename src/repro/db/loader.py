@@ -58,6 +58,18 @@ class LoadTiming:
     total_s: float = 0.0
 
 
+def _guarded_transfer(fn, *, injector=None, retry_policy=None):
+    """Run one host->device transfer through the ``page_dma_in`` fault
+    site under a retry policy (``db/faults.py``) — the loaders' leg of
+    the reliability layer.  The default (no injector, no policy) is a
+    direct call, so the measured transfer timings are untouched."""
+    if injector is None and retry_policy is None:
+        return fn()
+    from repro.db.faults import RetryPolicy
+    policy = retry_policy if retry_policy is not None else RetryPolicy()
+    return policy.run(fn, site="page_dma_in", injector=injector)
+
+
 # ---------------------------------------------------------------------------
 # Synthetic replicas of the paper's Tab. 1 grid (scale-parameterized).
 # `rows` are the full-size row counts; benchmarks pass a scale factor.
@@ -110,14 +122,17 @@ def write_csv(path: str, x: np.ndarray) -> None:
     np.savetxt(path, x, delimiter=",", fmt="%.6g")
 
 
-def load_csv_external(path: str, *, device=None, dtype=jnp.float32):
+def load_csv_external(path: str, *, device=None, dtype=jnp.float32,
+                      injector=None, retry_policy=None):
     """Timed external load: parse CSV -> convert -> device transfer."""
     t0 = time.perf_counter()
     host = np.loadtxt(path, delimiter=",", dtype=np.float64, ndmin=2)
     t1 = time.perf_counter()
     host32 = np.ascontiguousarray(host, dtype=np.float32)
     t2 = time.perf_counter()
-    dev = jax.device_put(jnp.asarray(host32, dtype), device)
+    dev = _guarded_transfer(
+        lambda: jax.device_put(jnp.asarray(host32, dtype), device),
+        injector=injector, retry_policy=retry_policy)
     dev.block_until_ready()
     t3 = time.perf_counter()
     return dev, LoadTiming(parse_s=t1 - t0, convert_s=t2 - t1,
@@ -158,7 +173,8 @@ def _parse_libsvm(path: str):
 
 
 def load_libsvm_external(path: str, num_features: int, *, device=None,
-                         dtype=jnp.float32, missing_as_nan: bool = True):
+                         dtype=jnp.float32, missing_as_nan: bool = True,
+                         injector=None, retry_policy=None):
     """Timed sparse load: parse text -> CSR -> densify -> transfer.
 
     The densify step is the "conversion" the paper's Criteo/Bosch pipelines
@@ -178,7 +194,9 @@ def load_libsvm_external(path: str, num_features: int, *, device=None,
     rows = np.repeat(np.arange(n), np.diff(indptr_np))
     dense[rows, indices_np] = values_np
     t2 = time.perf_counter()
-    dev = jax.device_put(jnp.asarray(dense, dtype), device)
+    dev = _guarded_transfer(
+        lambda: jax.device_put(jnp.asarray(dense, dtype), device),
+        injector=injector, retry_policy=retry_policy)
     dev.block_until_ready()
     t3 = time.perf_counter()
     timing = LoadTiming(parse_s=t1 - t0, convert_s=t2 - t1,
@@ -189,7 +207,8 @@ def load_libsvm_external(path: str, num_features: int, *, device=None,
 def load_libsvm_csr_external(path: str, num_features: int, *,
                              page_rows: int = 512, pages_multiple: int = 1,
                              tier: str = "device",
-                             spill_dir: str | None = None):
+                             spill_dir: str | None = None,
+                             injector=None, retry_policy=None):
     """Timed sparse load, SPARSE data plane: parse -> CSR pages -> transfer.
 
     Never materializes [N, F] on the host: parse builds host CSR lists,
@@ -252,8 +271,11 @@ def load_libsvm_csr_external(path: str, num_features: int, *,
                          n_features=int(num_features))
         t3 = t2               # no device transfer: transfer_s == 0
     else:
-        pages = CSRPages(indptr=jnp.asarray(ip), indices=jnp.asarray(ix),
-                         values=jnp.asarray(vl), n_features=int(num_features))
+        pages = _guarded_transfer(
+            lambda: CSRPages(indptr=jnp.asarray(ip), indices=jnp.asarray(ix),
+                             values=jnp.asarray(vl),
+                             n_features=int(num_features)),
+            injector=injector, retry_policy=retry_policy)
         jax.block_until_ready((pages.indptr, pages.indices, pages.values))
         t3 = time.perf_counter()
     timing = LoadTiming(parse_s=t1 - t0, convert_s=t2 - t1,

@@ -101,6 +101,8 @@ from repro.core.reuse import (GLOBAL_CACHE, GLOBAL_PLAN_CACHE,
                               fingerprint_forest, mesh_signature)
 from repro.db.executor import (DEFAULT_STREAM_BATCH_BYTES, ScanStats,
                                StreamingScanExecutor)
+from repro.db.faults import (Deadline, DegradedReport, FaultInjector,
+                             RetryPolicy)
 from repro.db.operators import (Operator, StageReport, ndevices,
                                 split_into_stages)
 from repro.db.store import TensorBlockStore
@@ -131,6 +133,10 @@ class QueryResult:
     mesh_devices: int = 1             # devices the query executed across
     tier: str = "device"              # memory tier the scan read from
     scan: ScanStats | None = None     # streaming-executor telemetry
+    degraded: DegradedReport | None = None   # set when the result is a
+    #                                   PARTIAL (deadline_s expired):
+    #                                   scored rows are exact, missing
+    #                                   rows are NaN, row_mask says which
 
     def breakdown(self) -> dict[str, float]:
         return {
@@ -513,6 +519,9 @@ class ForestQueryEngine:
         model_id: str | None = None,
         n_parts: int | None = None,
         prefetch_depth: int = 2,
+        deadline_s: float | None = None,
+        injector: FaultInjector | None = None,
+        retry_policy: RetryPolicy | None = None,
     ) -> QueryResult:
         """Run the end-to-end inference query (paper's measured pipeline).
 
@@ -522,6 +531,14 @@ class ForestQueryEngine:
         ``prefetch_depth`` controls the streaming executor: 2 (default)
         double-buffers page DMA against compute, 1 runs the synchronous
         reference pipeline (the benchmarks' overlap baseline).
+
+        Reliability (``db/faults.py``, ``docs/reliability.md``):
+        ``injector`` / ``retry_policy`` arm the scan's fault sites and
+        bound their recovery; ``deadline_s`` is the per-query budget —
+        checked cooperatively at batch boundaries, an expired budget
+        returns a PARTIAL result whose ``degraded`` report carries the
+        rows scored / missing and the exact ``row_mask`` (scored rows
+        are bit-identical to an unbounded run; missing rows are NaN).
         """
         if plan not in ("udf", "rel", "rel+reuse"):
             raise ValueError(f"unknown plan {plan!r}")
@@ -529,6 +546,10 @@ class ForestQueryEngine:
         fmt = getattr(ds, "storage_format", "dense")
         tier = getattr(ds, "tier", "device")
         t_query0 = time.perf_counter()
+        # the deadline budgets the WHOLE query from here (plan build +
+        # scan), matching what a caller on the request path experiences
+        deadline = Deadline(deadline_s, start=t_query0) \
+            if deadline_s is not None else None
         if batch_pages is None:
             batch_pages = ds.num_pages
             if tier != "device":
@@ -659,12 +680,28 @@ class ForestQueryEngine:
         # executor's preallocated host buffer — no concatenate (and no
         # jax-0.4.37 partially-replicated-concatenate workaround) on the
         # hot path.
-        executor = StreamingScanExecutor(qplan.stages,
-                                         sharding=self.store.data_sharding(),
-                                         prefetch_depth=prefetch_depth)
+        executor = StreamingScanExecutor(
+            qplan.stages,
+            sharding=self.store.data_sharding(),
+            prefetch_depth=prefetch_depth,
+            injector=injector,
+            retry_policy=retry_policy,
+            deadline=deadline,
+            # the device-transfer halving ladder's floor: halved batches
+            # must stay divisible by the mesh data axis
+            min_batch_pages=max(1, self.fplan.n_data))
         out_np, batch_reports, scan = executor.execute(ds, batch_pages)
         reports: list[StageReport] = list(prefix_reports) + batch_reports
         predictions = jnp.asarray(out_np)
+
+        degraded = None
+        if scan.deadline_hit:
+            mask = executor.last_mask
+            rows_scored = int(mask.sum()) if mask is not None else 0
+            degraded = DegradedReport(
+                rows_scored=rows_scored,
+                rows_missing=ds.num_rows - rows_scored,
+                cause="deadline", deadline_s=deadline_s, row_mask=mask)
 
         write_s = 0.0
         if write_as is not None:
@@ -701,4 +738,5 @@ class ForestQueryEngine:
             mesh_devices=(self.mesh.size if self.mesh is not None else 1),
             tier=tier,
             scan=scan,
+            degraded=degraded,
         )

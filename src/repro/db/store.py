@@ -71,6 +71,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.db.faults import (FaultInjector, InjectedFault, RetryPolicy,
+                             ScanFault)
 from repro.db.sparse import CSRPages, csr_from_dense, paginate_csr
 
 __all__ = ["StoredDataset", "SparseStoredDataset", "TensorBlockStore",
@@ -251,11 +253,20 @@ class TensorBlockStore:
                  default_page_rows: int = 1024,
                  device_budget_bytes: int | None = None,
                  host_budget_bytes: int | None = None,
-                 spill_dir: str | None = None):
+                 spill_dir: str | None = None,
+                 injector: FaultInjector | None = None,
+                 retry_policy: RetryPolicy | None = None):
         self.mesh = mesh
         self.default_page_rows = default_page_rows
         self.device_budget_bytes = device_budget_bytes
         self.host_budget_bytes = host_budget_bytes
+        # reliability wiring (db/faults.py): ``move`` reads off the disk
+        # tier through the ``disk_page_read`` site under the policy, and
+        # rolls back on exhaustion.  An armed injector with no explicit
+        # policy gets the documented default retry contract.
+        self.injector = injector
+        self.retry_policy = retry_policy if retry_policy is not None \
+            else (RetryPolicy() if injector is not None else None)
         self._spill_dir = spill_dir
         # spill files THIS store wrote, per dataset (loader-owned page
         # files handed over via put_sparse(pages=...) are not tracked —
@@ -527,32 +538,82 @@ class TensorBlockStore:
         therefore every prediction — is unchanged; compiled plans stay
         valid (tier is a runtime property of the scan, not of the plan).
         Moving OFF the disk tier deletes the spill files this store wrote
-        (after the copy — live views keep the unlinked inodes alive)."""
+        (after the copy — live views keep the unlinked inodes alive).
+
+        Failure semantics: reading the source off the DISK tier goes
+        through the ``disk_page_read`` fault site under the store's
+        retry policy; a fault that survives the retries ROLLS THE MOVE
+        BACK — any spill files this move already wrote are unlinked, the
+        tracked-path list is restored, and the catalog entry (and with
+        it the per-tier ``*_nbytes`` accounting) is untouched — then a
+        structured ``ScanFault`` is raised.  A failed move never leaks
+        orphaned page files and never corrupts tier accounting."""
         _check_tier(tier)
         ds = self.get(name)
         if ds.tier == tier:
             return ds
         was_disk = ds.tier == "disk"
         sharding = self.data_sharding()
+        injector, policy = self.injector, self.retry_policy
+
+        def read_source(arr) -> np.ndarray:
+            """Materialize one source page array on the host — the
+            ``disk_page_read`` site when the source is the disk tier."""
+            if not was_disk or (injector is None and policy is None):
+                return _host_copy(arr)
+            if policy is None:
+                injector.fire("disk_page_read")
+                return _host_copy(arr)
+            return policy.run(lambda: _host_copy(arr),
+                              site="disk_page_read", injector=injector)
 
         def relocate(label: str, arr):
             """One page array, source tier -> target tier."""
+            src = read_source(arr)
             if tier == "host":
-                return _host_copy(arr)
+                return src
             if tier == "disk":
-                return self._disk_array(name, label, _host_copy(arr))
-            out = jnp.asarray(np.asarray(jax.device_get(arr)))
+                return self._disk_array(name, label, src)
+            out = jnp.asarray(src)
             return out if sharding is None else jax.device_put(out, sharding)
 
-        if ds.storage_format == "csr":
-            pages = CSRPages(indptr=relocate("indptr", ds.pages.indptr),
-                             indices=relocate("indices", ds.pages.indices),
-                             values=relocate("values", ds.pages.values),
-                             n_features=ds.pages.n_features)
-            new = dataclasses.replace(ds, pages=pages, tier=tier)
-        else:
-            new = dataclasses.replace(ds, data=relocate("rows", ds.data),
-                                      tier=tier)
+        # rollback bookkeeping: anything _disk_array appends past this
+        # snapshot was written BY THIS MOVE and must not survive a failure
+        paths_before = list(self._disk_paths.get(name, ()))
+        try:
+            if ds.storage_format == "csr":
+                pages = CSRPages(indptr=relocate("indptr", ds.pages.indptr),
+                                 indices=relocate("indices",
+                                                  ds.pages.indices),
+                                 values=relocate("values", ds.pages.values),
+                                 n_features=ds.pages.n_features)
+                new = dataclasses.replace(ds, pages=pages, tier=tier)
+            else:
+                new = dataclasses.replace(ds, data=relocate("rows", ds.data),
+                                          tier=tier)
+        except BaseException as e:
+            for path in self._disk_paths.get(name, ()):
+                if path not in paths_before:
+                    try:
+                        os.unlink(path)
+                    except OSError:
+                        pass
+            if paths_before:
+                self._disk_paths[name] = paths_before
+            else:
+                self._disk_paths.pop(name, None)
+            retryable = (policy.retryable if policy is not None
+                         else (InjectedFault, OSError))
+            # only the GUARDED disk read gets the structured wrap; a
+            # failure elsewhere (e.g. the target-tier write) propagates
+            # as itself — it is not a disk_page_read exhaustion
+            if was_disk and isinstance(e, retryable):
+                attempts = policy.max_attempts if policy is not None else 1
+                raise ScanFault(
+                    "disk_page_read", attempts=attempts, rows_completed=0,
+                    cause=e,
+                    detail=f"move({name!r} -> {tier!r}) rolled back") from e
+            raise
         if was_disk:
             self._release_disk(name)
         self._datasets[name] = new

@@ -30,6 +30,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import ShardingPlan, make_plan
 from repro.models.registry import get_bundle
+from repro.serve.router import TIER_BATCH, TIER_INTERACTIVE
 
 Params = dict[str, Any]
 
@@ -42,6 +43,11 @@ class Request:
     eos_token: int = -1                # -1: never stop early
     priority: int = 1                  # router tier (0 = interactive)
     submitted_at: float = 0.0
+    timeout_s: float | None = None     # admission timeout: an interactive
+    #                                    request still queued past this
+    #                                    SHEDS to the batch tier instead
+    #                                    of camping the queue front
+    shed: bool = False                 # it happened (docs/reliability.md)
     # filled at completion:
     tokens: list[int] = dataclasses.field(default_factory=list)
     first_token_at: float = 0.0
@@ -80,6 +86,7 @@ class ServeEngine:
         self._cur_tokens = jnp.zeros((slots, 1), jnp.int32)
         self._uid = 0
         self.ticks = 0
+        self.shed_count = 0            # admission timeouts shed to batch
 
         self._decode = jax.jit(
             lambda p, c, t: self.bundle.decode(cfg, p, c, t, self.splan))
@@ -118,17 +125,44 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, *, max_new_tokens: int = 16,
-               eos_token: int = -1, priority: int = 1) -> int:
+               eos_token: int = -1, priority: int = 1,
+               timeout_s: float | None = None) -> int:
+        """Queue a request.  ``timeout_s`` is the per-request admission
+        timeout: an interactive (tier-0) request still waiting past it
+        is SHED to the batch tier — demoted to the queue back with
+        ``shed=True`` — rather than holding the queue front forever
+        (the serve plane's degradation ladder; docs/reliability.md)."""
         self._uid += 1
         req = Request(self._uid, np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens, eos_token=eos_token,
-                      priority=priority, submitted_at=time.perf_counter())
+                      priority=priority, submitted_at=time.perf_counter(),
+                      timeout_s=timeout_s)
         # priority admission: interactive (0) requests jump the queue
-        if priority == 0:
+        if priority == TIER_INTERACTIVE:
             self._queue.appendleft(req)
         else:
             self._queue.append(req)
         return req.uid
+
+    def _shed_timed_out(self) -> None:
+        """Admission-timeout ladder: demote interactive requests whose
+        wait exceeded their ``timeout_s`` to the batch tier (queue back,
+        ``shed`` flagged) so a saturated engine degrades the latecomer's
+        tier instead of queueing it at the front forever."""
+        now = time.perf_counter()
+        kept, shed = [], []
+        for req in self._queue:
+            if (req.timeout_s is not None
+                    and req.priority == TIER_INTERACTIVE
+                    and now - req.submitted_at >= req.timeout_s):
+                req.priority = TIER_BATCH
+                req.shed = True
+                shed.append(req)
+            else:
+                kept.append(req)
+        if shed:
+            self._queue = deque(kept + shed)
+            self.shed_count += len(shed)
 
     def _admit_one(self, req: Request, slot: int) -> None:
         P = len(req.prompt)
@@ -150,6 +184,7 @@ class ServeEngine:
     def step(self) -> list[Request]:
         """One engine tick: admit into free slots, one decode step, collect
         finished requests.  Returns newly finished requests."""
+        self._shed_timed_out()
         while self._free and self._queue:
             self._admit_one(self._queue.popleft(), self._free.pop())
         if not self._active:
@@ -201,4 +236,5 @@ class ServeEngine:
             "tokens": toks,
             "tokens_per_s": toks / max(span, 1e-9),
             "ticks": self.ticks,
+            "shed": self.shed_count,
         }

@@ -24,7 +24,16 @@ import numpy as np
 from repro.core.postprocess import predict_proba
 from repro.core.train import TrainConfig, train_forest
 
-__all__ = ["RouterConfig", "ForestRouter", "synth_router_trace"]
+__all__ = ["RouterConfig", "ForestRouter", "synth_router_trace",
+           "TIER_INTERACTIVE", "TIER_BATCH"]
+
+#: the router's latency tiers.  The serve engine admits TIER_INTERACTIVE
+#: requests at the queue front and — the reliability contract — SHEDS an
+#: interactive request that has waited past its admission timeout down to
+#: TIER_BATCH instead of letting it camp the front of the queue forever
+#: (``ServeEngine.submit(timeout_s=...)``, docs/reliability.md).
+TIER_INTERACTIVE = 0
+TIER_BATCH = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,7 +83,8 @@ class ForestRouter:
         self.forest = forest
 
     def route(self, feats: np.ndarray) -> int:
-        """[F] or [N, F] features -> tier(s): 0 interactive, 1 batch."""
+        """[F] or [N, F] features -> tier(s): ``TIER_INTERACTIVE`` (0)
+        or ``TIER_BATCH`` (1)."""
         x = jnp.asarray(np.atleast_2d(feats))
         p = predict_proba(self.forest, x, algorithm=self.cfg.algorithm)
         tiers = (np.asarray(p) > self.cfg.threshold).astype(int)

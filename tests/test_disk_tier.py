@@ -397,6 +397,52 @@ def test_compute_error_shuts_drain_worker_down():
     assert not leaked, f"drain worker leaked: {leaked} (before: {before})"
 
 
+def test_drain_worker_death_queue_full_no_deadlock():
+    """The latent deadlock this PR fixes: the drain worker dying while
+    the bounded queue is FULL used to leave the compute thread blocked
+    forever in ``queue.put``.  The put now times out, re-checks worker
+    liveness, and the scan degrades mid-flight to the synchronous drain
+    path — completing with the correct answer and honest stats."""
+    import threading
+    import time as _time
+
+    from repro.db.faults import FaultInjector
+    from repro.db.operators import Operator, split_into_stages
+
+    class _SlowDeath(FaultInjector):
+        """Holds the worker inside its first drain item long enough for
+        the compute thread to fill the maxsize-2 queue, THEN kills it —
+        deterministically exercising the blocked-put path."""
+
+        def fire(self, site):
+            if site == "drain_worker" and self.calls.get(site, 0) == 0:
+                _time.sleep(0.4)
+            super().fire(site)
+
+    x = np.arange(512 * 3, dtype=np.float32).reshape(512, 3)
+    store = TensorBlockStore(default_page_rows=16)
+    ds = store.put("dd", x, tier="disk")     # 32 pages -> 16 batches of 2
+
+    def udf(state):
+        state = dict(state)
+        state["pred"] = jnp.sum(state["x"], axis=1)
+        return state
+
+    stages = split_into_stages(
+        [Operator("udf", udf),
+         Operator("write", lambda s: s, breaker=True)], jit=False)
+    inj = _SlowDeath().inject("drain_worker", fail_at=1)
+    out, _, stats = StreamingScanExecutor(stages, injector=inj).execute(
+        ds, 2)
+    assert stats.degraded_to_sync
+    assert stats.faults_injected == 1
+    assert stats.batches == 16               # every batch still executed
+    np.testing.assert_allclose(np.asarray(out), x.sum(axis=1), rtol=1e-6)
+    leaked = [t for t in threading.enumerate()
+              if t.name.startswith("scan-drain") and t.is_alive()]
+    assert not leaked, f"drain worker leaked: {leaked}"
+
+
 # ---------------------------------------------------------------------------
 # multi-device half of the parity grid
 # ---------------------------------------------------------------------------

@@ -1,0 +1,528 @@
+"""Fault matrix for the reliability layer (``db/faults.py``).
+
+The acceptance contract under test: every injected fault site x plan
+(udf/rel) x storage format (dense/CSR) x tier (device/host/disk) —
+mesh-less here, on a (data x model) mesh in the guarded section — either
+
+  * RECOVERS with BIT-IDENTICAL predictions (transient faults inside the
+    retry budget, and every degradation ladder: mid-scan sync-drain
+    fallback, halved-batch resubmission, disk-read re-enqueue), with the
+    recovery visible in ``ScanStats`` (``retries`` / ``faults_injected``
+    / ``degraded_to_sync`` / ``batch_resubmits``), or
+  * raises a STRUCTURED ``ScanFault`` (site, attempts, rows completed,
+    cause) when the ladder is exhausted, or
+  * returns a PARTIAL ``QueryResult`` whose ``degraded`` report is exact
+    (``deadline_s``: scored rows bit-match the reference, missing rows
+    are NaN, the row mask says which is which) —
+
+never a silent wrong answer, never a hang.  ``store.move``'s rollback
+(no orphaned spill files, no corrupted per-tier accounting) and the
+injector/retry primitives themselves are covered at the bottom.
+See ``docs/reliability.md``.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reuse import ModelReuseCache
+from repro.core.train import TrainConfig, train_forest
+from repro.db import store as store_mod
+from repro.db.executor import StreamingScanExecutor
+from repro.db.faults import (FAULT_SITES, Deadline, DeadlineExceeded,
+                             FaultInjector, InjectedFault, RetryPolicy,
+                             ScanFault)
+from repro.db.operators import Operator, split_into_stages
+from repro.db.query import ForestQueryEngine
+from repro.db.store import TensorBlockStore
+
+N, F, T, PAGE = 384, 16, 24, 32
+FUSED = "predicated_pallas_fused"
+SPARSE_ALGO = "hummingbird_pallas_fused"
+TIERS = ("device", "host", "disk")
+
+#: retry semantics identical to the default, backoff sleeps zeroed so the
+#: exhaustion tests (3 attempts x every batch) stay fast
+FAST = RetryPolicy(backoff_base_s=0.0, max_backoff_s=0.0)
+
+
+@pytest.fixture(scope="module")
+def env():
+    """Shared store (every format x tier), engine, and a lazy reference
+    cache — fault runs must bit-match the clean run of the same query."""
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(N, F)).astype(np.float32)
+    w = rng.normal(size=F).astype(np.float32)
+    y = (x @ w > 0).astype(np.float32)
+    forest = train_forest(x, y, TrainConfig(model_type="xgboost",
+                                            num_trees=T, max_depth=4))
+    xs = x.copy()
+    xs[rng.random(x.shape) < 0.7] = np.nan
+    store = TensorBlockStore(default_page_rows=PAGE)
+    for tier in TIERS:
+        store.put(f"dense@{tier}", x, tier=tier)
+        store.put_sparse(f"csr@{tier}", xs, tier=tier)
+    engine = ForestQueryEngine(store, reuse_cache=ModelReuseCache(),
+                               plan_cache=ModelReuseCache())
+    refs: dict = {}
+
+    def ref(name: str, plan: str, algo: str) -> np.ndarray:
+        key = (name, plan, algo)
+        if key not in refs:
+            refs[key] = np.asarray(engine.infer(
+                name, forest, algorithm=algo, plan=plan,
+                batch_pages=2).predictions)
+        return refs[key]
+
+    return engine, forest, ref, (x, xs)
+
+
+def _sum_stages():
+    """Trivial jit-less plan for executor-level tests (sum over F)."""
+
+    def udf(state):
+        state = dict(state)
+        state["pred"] = jnp.sum(state["x"], axis=1)
+        return state
+
+    return split_into_stages(
+        [Operator("udf", udf), Operator("write", lambda s: s, breaker=True)],
+        jit=False)
+
+
+# ---------------------------------------------------------------------------
+# the fault matrix: transient faults recover bit-identically everywhere
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt,algo", [("dense", FUSED),
+                                      ("csr", SPARSE_ALGO)])
+@pytest.mark.parametrize("plan", ["udf", "rel"])
+@pytest.mark.parametrize("site", FAULT_SITES)
+def test_transient_fault_recovers_bit_identical(env, site, plan, fmt, algo):
+    """One transient fault (2nd call at the site) per scan: the retry
+    policy (or, for worker death, the sync-drain fallback) must recover
+    with predictions bit-identical to the clean run, and the ScanStats
+    fault fields must account for exactly what happened."""
+    engine, forest, ref, _ = env
+    for tier in TIERS:
+        if site == "disk_page_read" and tier != "disk":
+            continue                  # the site only exists on disk scans
+        inj = FaultInjector().inject(site, fail_at=2)
+        res = engine.infer(f"{fmt}@{tier}", forest, algorithm=algo,
+                           plan=plan, batch_pages=2, injector=inj,
+                           retry_policy=FAST)
+        sc = res.scan
+        assert sc.faults_injected == 1, (site, tier)
+        if site == "drain_worker":
+            # thread death is not retried — it degrades to the sync path
+            assert sc.degraded_to_sync and sc.retries == 0, (site, tier)
+        else:
+            assert sc.retries == 1, (site, tier)
+            assert not sc.degraded_to_sync, (site, tier)
+        assert sc.batch_resubmits == 0, (site, tier)
+        assert not sc.deadline_hit and res.degraded is None
+        assert np.array_equal(np.asarray(res.predictions),
+                              ref(f"{fmt}@{tier}", plan, algo)), (site, tier)
+
+
+def test_armed_but_silent_injector_changes_nothing(env):
+    """An armed injector whose site never fires (fail_at past the scan's
+    call count) must leave predictions AND fault accounting untouched —
+    the instrumented zero-fault path is the measured hot path."""
+    engine, forest, ref, _ = env
+    inj = FaultInjector().inject("kernel_launch", fail_at=10_000)
+    res = engine.infer("dense@host", forest, algorithm=FUSED, plan="udf",
+                       batch_pages=2, injector=inj, retry_policy=FAST)
+    sc = res.scan
+    assert sc.faults_injected == 0 and sc.retries == 0
+    assert not sc.degraded_to_sync and sc.batch_resubmits == 0
+    assert np.array_equal(np.asarray(res.predictions),
+                          ref("dense@host", "udf", FUSED))
+    assert inj.calls["kernel_launch"] == sc.batches
+
+
+# ---------------------------------------------------------------------------
+# degradation ladders past the retry budget
+# ---------------------------------------------------------------------------
+
+
+def test_dma_halving_ladder_recovers(env):
+    """Device-transfer faults that exhaust the retries resubmit the batch
+    at HALVED batch_pages (the OOM answer): the split batches land at the
+    same deterministic slots, so the result stays bit-identical."""
+    engine, forest, ref, _ = env
+    inj = FaultInjector().inject("page_dma_in", fail_at=1,
+                                 times=FAST.max_attempts)
+    res = engine.infer("dense@host", forest, algorithm=FUSED, plan="udf",
+                       batch_pages=4, injector=inj, retry_policy=FAST)
+    sc = res.scan
+    assert sc.batch_resubmits == 1        # one batch split into halves
+    assert sc.faults_injected == FAST.max_attempts
+    assert sc.retries == FAST.max_attempts - 1
+    assert sc.batches == 4                # 3 planned: 1 split into 2 + 2
+    assert np.array_equal(np.asarray(res.predictions),
+                          ref("dense@host", "udf", FUSED))
+
+
+def test_dma_ladder_floor_raises_structured_scanfault(env):
+    """At one data-axis unit the halving ladder has no rung left: the
+    scan must raise a ScanFault carrying site/attempts/rows/cause."""
+    engine, forest, _, _ = env
+    inj = FaultInjector().inject("page_dma_in", fail_at=1, times=10_000)
+    with pytest.raises(ScanFault) as ei:
+        engine.infer("dense@host", forest, algorithm=FUSED, plan="udf",
+                     batch_pages=2, injector=inj, retry_policy=FAST)
+    e = ei.value
+    assert e.site == "page_dma_in"
+    assert e.attempts == FAST.max_attempts
+    assert e.rows_completed == 0
+    assert isinstance(e.cause, InjectedFault)
+
+
+def test_disk_reenqueue_ladder_recovers(env):
+    """Disk-read faults that exhaust the retries re-enqueue the batch
+    once at the end of the plan; deterministic slots make the reordered
+    completion bit-identical."""
+    engine, forest, ref, _ = env
+    inj = FaultInjector().inject("disk_page_read", fail_at=1,
+                                 times=FAST.max_attempts)
+    res = engine.infer("dense@disk", forest, algorithm=FUSED, plan="udf",
+                       batch_pages=2, injector=inj, retry_policy=FAST)
+    sc = res.scan
+    assert sc.batch_resubmits == 1
+    assert sc.faults_injected == FAST.max_attempts
+    assert np.array_equal(np.asarray(res.predictions),
+                          ref("dense@disk", "udf", FUSED))
+
+
+def test_disk_reenqueue_exhaustion_raises_structured_scanfault(env):
+    """A persistently failing disk read fails structured after the one
+    re-enqueue: 2 x max_attempts at the site, zero rows silently wrong."""
+    engine, forest, _, _ = env
+    inj = FaultInjector().inject("disk_page_read", fail_at=1, times=10**6)
+    with pytest.raises(ScanFault) as ei:
+        engine.infer("dense@disk", forest, algorithm=FUSED, plan="udf",
+                     batch_pages=2, injector=inj, retry_policy=FAST)
+    e = ei.value
+    assert e.site == "disk_page_read"
+    assert e.attempts == 2 * FAST.max_attempts
+    assert e.rows_completed == 0
+    assert isinstance(e.cause, InjectedFault)
+
+
+@pytest.mark.parametrize("site", ["kernel_launch", "drain_copy_out"])
+def test_unladdered_site_exhaustion_raises_structured_scanfault(env, site):
+    """kernel_launch / drain_copy_out have no degradation rung below the
+    retries: exhaustion surfaces as ScanFault (for the drain: carried
+    off the worker thread and re-raised on the compute thread)."""
+    engine, forest, _, _ = env
+    inj = FaultInjector().inject(site, fail_at=1, times=10**6)
+    with pytest.raises(ScanFault) as ei:
+        engine.infer("dense@host", forest, algorithm=FUSED, plan="udf",
+                     batch_pages=2, injector=inj, retry_policy=FAST)
+    e = ei.value
+    assert e.site == site
+    assert e.attempts == FAST.max_attempts
+    assert isinstance(e.cause, InjectedFault)
+
+
+# ---------------------------------------------------------------------------
+# deadlines: partial results with exact accounting
+# ---------------------------------------------------------------------------
+
+
+class _CountingDeadline(Deadline):
+    """Expires after a fixed number of expiry checks — a deterministic
+    mid-scan deadline with no wall-clock flakiness (the executor checks
+    once per batch iteration)."""
+
+    def __init__(self, checks_allowed: int):
+        super().__init__(None)
+        self.checks_allowed = checks_allowed
+        self.checks = 0
+
+    @property
+    def expired(self) -> bool:
+        self.checks += 1
+        return self.checks > self.checks_allowed
+
+
+def test_deadline_partial_scored_rows_match_reference_exactly():
+    """The deadline contract: rows drained before expiry are BIT-exact
+    against the unbounded run, missing rows are NaN, and the mask is
+    precise — batch boundaries, nothing torn."""
+    x = np.arange(256 * 5, dtype=np.float32).reshape(256, 5)
+    store = TensorBlockStore(default_page_rows=16)
+    ds = store.put("p", x, tier="host")
+    full, _, _ = StreamingScanExecutor(_sum_stages()).execute(ds, 2)
+    ex = StreamingScanExecutor(_sum_stages(),
+                               deadline=_CountingDeadline(3))
+    part, _, st = ex.execute(ds, 2)
+    assert st.deadline_hit
+    assert st.batches == 3               # 3 of the 8 planned batches ran
+    mask = ex.last_mask
+    assert mask is not None and mask.shape == (256,)
+    assert mask.sum() == 3 * 2 * 16      # whole batches only
+    np.testing.assert_array_equal(part[mask], full[mask])
+    assert np.isnan(part[~mask]).all()
+
+
+def test_deadline_zero_budget_returns_empty_partial(env):
+    """An already-expired budget still returns gracefully: an all-NaN
+    partial with a fully populated degraded report, not an exception."""
+    engine, forest, _, _ = env
+    res = engine.infer("dense@host", forest, algorithm=FUSED, plan="udf",
+                       batch_pages=2, deadline_s=0.0)
+    assert res.scan.deadline_hit
+    d = res.degraded
+    assert d is not None and bool(d)
+    assert d.cause == "deadline" and d.deadline_s == 0.0
+    assert d.rows_scored == 0 and d.rows_missing == N
+    assert d.row_mask is not None and d.row_mask.shape == (N,)
+    assert not d.row_mask.any()
+    assert np.isnan(np.asarray(res.predictions)).all()
+
+
+def test_generous_deadline_is_not_a_degradation(env):
+    """A budget the scan fits inside must leave no trace: full result,
+    no degraded report, deadline_hit False."""
+    engine, forest, ref, _ = env
+    res = engine.infer("dense@host", forest, algorithm=FUSED, plan="udf",
+                       batch_pages=2, deadline_s=3600.0)
+    assert not res.scan.deadline_hit and res.degraded is None
+    assert np.array_equal(np.asarray(res.predictions),
+                          ref("dense@host", "udf", FUSED))
+
+
+# ---------------------------------------------------------------------------
+# store.move: guarded disk reads + rollback (no leaks, exact accounting)
+# ---------------------------------------------------------------------------
+
+
+def test_move_rolls_back_on_disk_read_fault():
+    """A move whose disk-tier source read exhausts its retries must roll
+    back completely: catalog tier, per-tier nbytes, and spill files all
+    unchanged — and succeed once the fault clears."""
+    x = np.arange(128 * 4, dtype=np.float32).reshape(128, 4)
+    inj = FaultInjector().inject("disk_page_read", fail_at=1,
+                                 times=FAST.max_attempts)
+    store = TensorBlockStore(default_page_rows=16, injector=inj,
+                             retry_policy=FAST)
+    ds = store.put("d", x, tier="disk")
+    files = sorted(os.listdir(store.spill_dir))
+    disk0 = store.disk_nbytes
+    assert disk0 == ds.nbytes
+    with pytest.raises(ScanFault) as ei:
+        store.move("d", "host")
+    e = ei.value
+    assert e.site == "disk_page_read" and e.attempts == FAST.max_attempts
+    assert isinstance(e.cause, InjectedFault)
+    assert store.get("d").tier == "disk"
+    assert store.disk_nbytes == disk0 and store.host_nbytes == 0
+    assert sorted(os.listdir(store.spill_dir)) == files
+    # the injector disarmed after `times` fires: the retried move works
+    moved = store.move("d", "host")
+    assert moved.tier == "host"
+    np.testing.assert_array_equal(np.asarray(moved.data), x)
+    assert store.disk_nbytes == 0 and store.host_nbytes == moved.nbytes
+    assert os.listdir(store.spill_dir) == []
+
+
+def test_move_to_disk_failure_leaks_no_files(monkeypatch):
+    """The spill-file-leak regression: a fault midway through a move
+    ONTO the disk tier (first CSR page file written, second write dies)
+    must unlink the partial files and leave accounting intact."""
+    x = np.arange(64 * 3, dtype=np.float32).reshape(64, 3)
+    xs = x.copy()
+    xs[::3] = np.nan
+    store = TensorBlockStore(default_page_rows=16)
+    store.put_sparse("s", xs, tier="host")
+    host0 = store.host_nbytes
+    real = store_mod.mmap_array
+    cnt = {"n": 0}
+
+    def flaky(path, arr):
+        cnt["n"] += 1
+        if cnt["n"] == 2:
+            raise OSError("synthetic: disk full")
+        return real(path, arr)
+
+    monkeypatch.setattr(store_mod, "mmap_array", flaky)
+    with pytest.raises(OSError):
+        store.move("s", "disk")
+    assert store.get("s").tier == "host"
+    assert store.host_nbytes == host0 and store.disk_nbytes == 0
+    assert os.listdir(store.spill_dir) == []     # partial file unlinked
+    assert "s" not in store._disk_paths
+    monkeypatch.setattr(store_mod, "mmap_array", real)
+    moved = store.move("s", "disk")              # filesystem recovered
+    assert moved.tier == "disk"
+    assert store.disk_nbytes == moved.nbytes and store.host_nbytes == 0
+    assert len(os.listdir(store.spill_dir)) == 3
+
+
+# ---------------------------------------------------------------------------
+# injector + retry primitives
+# ---------------------------------------------------------------------------
+
+
+def test_injector_fail_at_and_times():
+    inj = FaultInjector().inject("kernel_launch", fail_at=3, times=2)
+    fired = []
+    for i in range(1, 8):
+        try:
+            inj.fire("kernel_launch")
+            fired.append(False)
+        except InjectedFault as e:
+            assert e.site == "kernel_launch" and e.call == i
+            fired.append(True)
+    assert fired == [False, False, True, True, False, False, False]
+    assert inj.total_fired == 2
+    assert inj.calls["kernel_launch"] == 7
+
+
+def test_injector_probability_mode_is_seed_deterministic():
+    def trace(seed: int) -> list[int]:
+        inj = FaultInjector(seed=seed).inject("page_dma_in",
+                                              probability=0.5, times=10**9)
+        out = []
+        for _ in range(64):
+            try:
+                inj.fire("page_dma_in")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    a = trace(5)
+    assert a == trace(5)                 # replay-stable
+    assert 0 < sum(a) < 64               # actually probabilistic
+    assert trace(6) != a                 # seed-sensitive
+
+
+def test_injector_validation():
+    inj = FaultInjector()
+    with pytest.raises(ValueError):
+        inj.inject("bogus_site", fail_at=1)
+    with pytest.raises(ValueError):
+        inj.inject("kernel_launch")                      # neither mode
+    with pytest.raises(ValueError):
+        inj.inject("kernel_launch", fail_at=1, probability=0.5)  # both
+
+
+def test_retry_policy_recovers_and_counts():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    retries = []
+    assert FAST.run(flaky, site="disk_page_read",
+                    on_retry=lambda: retries.append(1)) == "ok"
+    assert calls["n"] == 3 and len(retries) == 2
+
+
+def test_retry_policy_exhaustion_and_non_retryable():
+    def always():
+        raise OSError("permanent")
+
+    with pytest.raises(OSError):
+        FAST.run(always, site="disk_page_read")
+
+    calls = {"n": 0}
+
+    def bug():
+        calls["n"] += 1
+        raise ValueError("a bug, not a fault")
+
+    with pytest.raises(ValueError):
+        FAST.run(bug, site="kernel_launch")
+    assert calls["n"] == 1               # bugs are never retried
+
+
+def test_retry_backoff_is_deterministic_and_capped():
+    p = RetryPolicy()
+    assert p.backoff_s("page_dma_in", 1) == p.backoff_s("page_dma_in", 1)
+    assert p.backoff_s("page_dma_in", 1) != p.backoff_s("drain_copy_out", 1)
+    assert p.backoff_s("page_dma_in", 2) > p.backoff_s("page_dma_in", 1) / 4
+    assert p.backoff_s("page_dma_in", 30) \
+        <= p.max_backoff_s * (1 + p.jitter_frac)
+
+
+def test_retry_under_expired_deadline_raises_deadline_exceeded():
+    def always():
+        raise OSError("x")
+
+    with pytest.raises(DeadlineExceeded):
+        FAST.run(always, site="page_dma_in", deadline=Deadline(0.0))
+
+
+# ---------------------------------------------------------------------------
+# mesh half of the matrix (skips without 8 forced CPU devices)
+# ---------------------------------------------------------------------------
+
+NDEV = len(jax.devices())
+needs_mesh = pytest.mark.skipif(
+    NDEV < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _mesh_engine(x, xs):
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4),
+                ("data", "model"))
+    store = TensorBlockStore(mesh, default_page_rows=PAGE)
+    for tier in TIERS:
+        store.put(f"dense@{tier}", x, tier=tier)
+        store.put_sparse(f"csr@{tier}", xs, tier=tier)
+    return ForestQueryEngine(store, reuse_cache=ModelReuseCache(),
+                             plan_cache=ModelReuseCache())
+
+
+@needs_mesh
+@pytest.mark.parametrize("site", ["page_dma_in", "disk_page_read",
+                                  "drain_worker"])
+def test_mesh_transient_fault_recovers(env, site):
+    """The shard_map plans under injected faults: recovery must stay
+    bit-identical to the clean mesh run on the disk tier."""
+    engine, forest, _, (x, xs) = env
+    m = _mesh_engine(x, xs)
+    kw = dict(algorithm=FUSED, plan="rel", batch_pages=4)
+    clean = m.infer("dense@disk", forest, **kw)
+    inj = FaultInjector().inject(site, fail_at=2)
+    res = m.infer("dense@disk", forest, injector=inj, retry_policy=FAST,
+                  **kw)
+    sc = res.scan
+    assert sc.faults_injected == 1
+    if site == "drain_worker":
+        assert sc.degraded_to_sync
+    else:
+        assert sc.retries == 1
+    assert np.array_equal(np.asarray(res.predictions),
+                          np.asarray(clean.predictions)), site
+
+
+@needs_mesh
+def test_mesh_halving_ladder_stays_data_axis_aligned(env):
+    """Halved batches must stay divisible by the data axis (2): the
+    ladder floor is the mesh unit, not one page."""
+    engine, forest, _, (x, xs) = env
+    m = _mesh_engine(x, xs)
+    kw = dict(algorithm=FUSED, plan="udf", batch_pages=4)
+    clean = m.infer("dense@host", forest, **kw)
+    inj = FaultInjector().inject("page_dma_in", fail_at=1,
+                                 times=FAST.max_attempts)
+    res = m.infer("dense@host", forest, injector=inj, retry_policy=FAST,
+                  **kw)
+    sc = res.scan
+    assert sc.batch_resubmits == 1
+    assert np.array_equal(np.asarray(res.predictions),
+                          np.asarray(clean.predictions))

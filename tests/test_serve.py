@@ -14,7 +14,7 @@ from repro.configs import get_config, reduced
 from repro.dist.sharding import make_plan
 from repro.models import get_bundle
 from repro.serve.engine import ServeEngine
-from repro.serve.router import (ForestRouter, RouterConfig,
+from repro.serve.router import (TIER_BATCH, ForestRouter, RouterConfig,
                                 request_features, synth_router_trace)
 
 KEY = jax.random.PRNGKey(0)
@@ -93,6 +93,33 @@ def test_engine_priority_admission(served):
     done = engine.run_until_drained()
     order = [r.uid for r in done]
     assert order.index(uid3) < order.index(2)
+
+
+def test_admission_timeout_sheds_to_batch_tier(served):
+    """The serve plane's degradation ladder: an interactive request
+    whose admission timeout lapses while queued is SHED to the batch
+    tier (queue back, ``shed`` flagged, counted in stats) instead of
+    jumping ahead of earlier batch-tier work."""
+    cfg, _, params = served
+    rng = np.random.default_rng(3)
+    engine = ServeEngine(cfg, params, slots=1, max_ctx=64,
+                         prompt_buckets=(8,), dtype=jnp.float32)
+    uid1 = engine.submit(rng.integers(0, cfg.vocab_size, 4),
+                         max_new_tokens=4, priority=1)
+    uid2 = engine.submit(rng.integers(0, cfg.vocab_size, 4),
+                         max_new_tokens=2, priority=1)
+    # interactive, but its admission budget is already spent on arrival
+    uid3 = engine.submit(rng.integers(0, cfg.vocab_size, 4),
+                         max_new_tokens=2, priority=0, timeout_s=0.0)
+    done = engine.run_until_drained()
+    order = [r.uid for r in done]
+    # shed behind BOTH earlier batch requests, not served first
+    assert order.index(uid3) > order.index(uid1)
+    assert order.index(uid3) > order.index(uid2)
+    req3 = next(r for r in done if r.uid == uid3)
+    assert req3.shed and req3.priority == TIER_BATCH
+    assert engine.stats()["shed"] == 1
+    assert len(done) == 3 and len(req3.tokens) == 2
 
 
 # ---------------------------------------------------------------------------
