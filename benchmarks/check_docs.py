@@ -1,14 +1,26 @@
-"""Docs-consistency check: every BENCH_*.json key must be documented.
+"""Docs-consistency check: benchmark fields AND obs names must be documented.
 
-``docs/benchmarks.md`` is the contract for reading the benchmark
-trajectory files.  This check walks every ``BENCH_*.json`` at the repo
-root, collects EVERY dict key that occurs anywhere in the payload
-(top-level, ``env``, and per-record fields alike), and fails if any key
-is not mentioned — in backticks — in ``docs/benchmarks.md``.  CI runs it
-right after the streaming smoke regenerates ``BENCH_stream.json``, so a
-new benchmark field cannot land without its documentation.
+Two contracts, one stdlib-only gate (CI runs it before any heavyweight
+imports are warm):
 
-Stdlib only (CI runs it before any heavyweight imports are warm):
+  * ``docs/benchmarks.md`` is the contract for reading the benchmark
+    trajectory files.  The check walks every ``BENCH_*.json`` at the
+    repo root, collects EVERY dict key that occurs anywhere in the
+    payload (top-level, ``env``, and per-record fields alike), and
+    fails if any key is not mentioned — in backticks — in the doc.
+    ``BENCH_obs.json`` is held against ``docs/observability.md``
+    instead: the observability plane's fields belong with its span
+    taxonomy, not in the generic benchmark contract.
+  * ``docs/observability.md`` is the contract for the observability
+    plane itself: every span / event / metric name the instrumentation
+    can export (the catalog in ``src/repro/obs/names.py`` — imported
+    here WITHOUT jax; ``repro.obs`` is stdlib-only by design) must
+    appear, in backticks, in the doc.  Add an instrument without
+    cataloging + documenting it and CI fails.
+
+CI runs it right after the streaming smoke regenerates
+``BENCH_stream.json``, so a new benchmark field cannot land without its
+documentation:
 
     python benchmarks/check_docs.py
 """
@@ -22,6 +34,11 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 DOC = ROOT / "docs" / "benchmarks.md"
+OBS_DOC = ROOT / "docs" / "observability.md"
+
+#: bench files whose field contract lives in a doc other than
+#: docs/benchmarks.md
+DOC_OVERRIDES = {"BENCH_obs.json": OBS_DOC}
 
 
 def collect_keys(payload) -> set[str]:
@@ -41,25 +58,72 @@ def collect_keys(payload) -> set[str]:
     return keys
 
 
-def main() -> int:
-    if not DOC.exists():
-        print(f"FAIL: {DOC.relative_to(ROOT)} does not exist")
-        return 1
-    documented = set(re.findall(r"`([A-Za-z0-9_.]+)`", DOC.read_text()))
+def _backticked(doc: pathlib.Path) -> set[str]:
+    return set(re.findall(r"`([A-Za-z0-9_.:]+)`", doc.read_text()))
+
+
+def check_bench_files() -> bool:
+    docs = {DOC, *DOC_OVERRIDES.values()}
+    missing_docs = [d for d in docs if not d.exists()]
+    if missing_docs:
+        for d in missing_docs:
+            print(f"FAIL: {d.relative_to(ROOT)} does not exist")
+        return True
+    documented = {d: _backticked(d) for d in docs}
     bench_files = sorted(ROOT.glob("BENCH_*.json"))
     if not bench_files:
         print("FAIL: no BENCH_*.json files found to check")
-        return 1
+        return True
     failed = False
     for path in bench_files:
+        doc = DOC_OVERRIDES.get(path.name, DOC)
         keys = collect_keys(json.loads(path.read_text()))
-        missing = sorted(keys - documented)
+        missing = sorted(keys - documented[doc])
         if missing:
             failed = True
             print(f"FAIL {path.name}: keys missing from "
-                  f"docs/benchmarks.md: {', '.join(missing)}")
+                  f"{doc.relative_to(ROOT)}: {', '.join(missing)}")
         else:
-            print(f"OK   {path.name}: all {len(keys)} keys documented")
+            print(f"OK   {path.name}: all {len(keys)} keys documented "
+                  f"({doc.relative_to(ROOT)})")
+    return failed
+
+
+def check_obs_names() -> bool:
+    """Every name in the obs catalog must appear in docs/observability.md.
+
+    ``repro.obs.names`` is stdlib-only (the repo uses a namespace
+    package under src/), so the import needs no jax — just the path.
+    """
+    if not OBS_DOC.exists():
+        print(f"FAIL: {OBS_DOC.relative_to(ROOT)} does not exist")
+        return True
+    sys.path.insert(0, str(ROOT / "src"))
+    try:
+        from repro.obs import names as obs_names
+    finally:
+        sys.path.pop(0)
+    documented = _backticked(OBS_DOC)
+    failed = False
+    for label, catalog in (("span", obs_names.SPAN_NAMES),
+                           ("span-prefix", obs_names.SPAN_PREFIXES),
+                           ("event", obs_names.EVENT_NAMES),
+                           ("metric", obs_names.METRIC_NAMES)):
+        missing = sorted(n for n in catalog
+                         if n.rstrip(":") not in documented
+                         and n not in documented)
+        if missing:
+            failed = True
+            print(f"FAIL obs {label} names missing from "
+                  f"{OBS_DOC.relative_to(ROOT)}: {', '.join(missing)}")
+        else:
+            print(f"OK   obs {label} names: all {len(catalog)} documented")
+    return failed
+
+
+def main() -> int:
+    failed = check_bench_files()
+    failed = check_obs_names() or failed
     return 1 if failed else 0
 
 

@@ -109,6 +109,7 @@ import numpy as np
 from repro.db.faults import (Deadline, DeadlineExceeded, FaultInjector,
                              InjectedFault, RetryPolicy, ScanFault)
 from repro.db.operators import StageReport, run_stages
+from repro.obs import METRICS, TRACER
 
 __all__ = ["ScanSource", "ScanStats", "StreamingScanExecutor",
            "MAX_IN_FLIGHT"]
@@ -313,17 +314,26 @@ class _ResultSink:
     def _count_retry(self):
         self.stats.retries += 1
 
-    def write(self, first_page: int, num_pages: int, pred) -> None:
-        """One batch's drain, guarded at the ``drain_copy_out`` site."""
-        if self.policy is None and self.injector is None:
-            return self._write_once(first_page, num_pages, pred)
-        if self.policy is None:
-            self.injector.fire("drain_copy_out")
-            return self._write_once(first_page, num_pages, pred)
-        return self.policy.run(
-            lambda: self._write_once(first_page, num_pages, pred),
-            site="drain_copy_out", injector=self.injector,
-            on_retry=self._count_retry)
+    def write(self, first_page: int, num_pages: int, pred,
+              parent=None) -> None:
+        """One batch's drain, guarded at the ``drain_copy_out`` site.
+
+        ``parent`` is the owning batch's span (captured on the COMPUTE
+        thread): the drain worker's write span nests under it even
+        though the two live on different threads — that cross-thread
+        edge is what makes the async drain's overlap legible in the
+        exported trace."""
+        with TRACER.span("scan.drain_write", parent=parent,
+                         first_page=first_page, num_pages=num_pages):
+            if self.policy is None and self.injector is None:
+                return self._write_once(first_page, num_pages, pred)
+            if self.policy is None:
+                self.injector.fire("drain_copy_out")
+                return self._write_once(first_page, num_pages, pred)
+            return self.policy.run(
+                lambda: self._write_once(first_page, num_pages, pred),
+                site="drain_copy_out", injector=self.injector,
+                on_retry=self._count_retry)
 
     def drain_loop(self, q: queue_mod.Queue) -> None:
         while True:
@@ -539,6 +549,7 @@ class StreamingScanExecutor:
             drain_active = False
             depth = 1
             stats.degraded_to_sync = True
+            TRACER.event("degrade.sync_drain")
             worker.join(timeout=5.0)
             sink.drain_pending(drain_q)
 
@@ -551,9 +562,11 @@ class StreamingScanExecutor:
             first, n = pending[0]
             try:
                 if source.tier == "disk":
-                    block = self._guard(
-                        lambda: source.page_slice(first, n),
-                        "disk_page_read", stats)
+                    with TRACER.span("scan.disk_read", first_page=first,
+                                     num_pages=n):
+                        block = self._guard(
+                            lambda: source.page_slice(first, n),
+                            "disk_page_read", stats)
                 else:
                     block = source.page_slice(first, n)
             except DeadlineExceeded:
@@ -567,6 +580,8 @@ class StreamingScanExecutor:
                     resubmitted.add((first, n))
                     pending.append((first, n))
                     stats.batch_resubmits += 1
+                    TRACER.event("batch.resubmit", site="disk_page_read",
+                                 first_page=first, num_pages=n)
                     return False
                 raise ScanFault("disk_page_read",
                                 attempts=2 * self._attempts,
@@ -575,9 +590,11 @@ class StreamingScanExecutor:
                                 cause=e) from e
             t0 = time.perf_counter()
             try:
-                block = self._guard(
-                    lambda: source.to_device(block, self.sharding),
-                    "page_dma_in", stats)             # async DMA
+                with TRACER.span("scan.dma_in", first_page=first,
+                                 num_pages=n):
+                    block = self._guard(
+                        lambda: source.to_device(block, self.sharding),
+                        "page_dma_in", stats)         # async DMA
             except DeadlineExceeded:
                 raise
             except retryable as e:
@@ -591,6 +608,8 @@ class StreamingScanExecutor:
                     pending.appendleft((first + n1, n - n1))
                     pending.appendleft((first, n1))
                     stats.batch_resubmits += 1
+                    TRACER.event("batch.resubmit", site="page_dma_in",
+                                 first_page=first, num_pages=n)
                     return False
                 raise ScanFault("page_dma_in", attempts=self._attempts,
                                 rows_completed=min(sink.rows_written,
@@ -607,103 +626,150 @@ class StreamingScanExecutor:
             bufs.append(_InFlight(len(resubmitted) + live, first, n, block))
             return True
 
-        def submit(first: int, n: int, pred):
+        def submit(first: int, n: int, pred, batch_span=None):
             """Hand batch i's prediction to the drain.  The D2H copy is
             issued async HERE (on the compute thread) so it progresses
             while the worker is busy; the worker completes and writes it.
             Pinned-eligible predictions skip the plain async copy — their
             one and only D2H is the worker's device_put into pinned
             staging (two transfers would waste the DMA bandwidth the
-            pinned path exists to save)."""
+            pinned path exists to save).  ``batch_span`` rides the queue
+            item so the drain worker's ``scan.drain_write`` span nests
+            under the owning batch even across the thread hop."""
             if not sink.wants_pinned(pred) \
                     and hasattr(pred, "copy_to_host_async"):
                 pred.copy_to_host_async()
             t0 = time.perf_counter()
-            if drain_active:
-                if put_drain((first, n, pred)):
-                    stats.drain_wait_s += time.perf_counter() - t0
-                    return
-                degrade_to_sync()        # dead worker: recover + go sync
-            try:
-                sink.write(first, n, pred)
-            except retryable as e:
-                raise ScanFault("drain_copy_out", attempts=self._attempts,
-                                rows_completed=min(sink.rows_written,
-                                                   source.num_rows),
-                                cause=e) from e
-            finally:
-                stats.drain_wait_s += time.perf_counter() - t0
-
-        try:
-            while pending or bufs:
-                if sink.error is not None:
-                    break                 # a drained batch already
-                #                           failed: don't pay for the
-                #                           rest of the scan first
-                if deadline is not None and deadline.expired:
-                    stats.deadline_hit = True
-                    break                 # budget spent: keep what landed
-                try:
-                    if not bufs:
-                        if not try_acquire():
-                            continue      # ladder adjusted the plan
-                    cur = bufs.popleft()
-                    # batch i+1: issue its page DMA while batch i computes
-                    while len(bufs) + 1 < depth and pending:
-                        if not try_acquire():
-                            break         # ladder adjusted the plan
-                    t0 = time.perf_counter()
-                    jax.block_until_ready(cur.block)
-                    stats.transfer_wait_s += time.perf_counter() - t0
-                    t0 = time.perf_counter()
-                    try:
-                        state, reps = self._guard(
-                            lambda: run_stages(self.stages,
-                                               {"x": cur.block}),
-                            "kernel_launch", stats)
-                    except retryable as e:
-                        raise ScanFault(
-                            "kernel_launch", attempts=self._attempts,
-                            rows_completed=min(sink.rows_written,
-                                               source.num_rows),
-                            cause=e) from e
-                    stats.compute_s += time.perf_counter() - t0
-                    reports.extend(reps)
-                    stats.batches += 1
-                    batch_idx += 1
-                    submit(cur.first_page, cur.num_pages,
-                           state[self.result_key])
-                    # release the page buffer NOW: some plans thread "x"
-                    # through to the final stage output, so dropping
-                    # `state` (not just cur.block) is what actually frees
-                    # the device pages — else a third buffer would be
-                    # alive during the next prefetch
-                    state = None
-                    cur.block = None              # at most 2 ever live
-                    live -= 1
-                except DeadlineExceeded:
-                    # budget expired inside a retry loop: same graceful
-                    # exit as the between-batches check
-                    stats.deadline_hit = True
-                    break
-        finally:
-            # shut the worker down on EVERY exit: a failing stage (or
-            # the in-flight assert) must not strand the daemon thread in
-            # q.get() pinning the result buffer for the process lifetime.
-            # put_drain (not a blocking put) so a dead worker + full
-            # queue cannot deadlock the shutdown either; drain_pending
-            # then recovers anything a dead worker left behind.
-            if async_drain:
-                t0 = time.perf_counter()
+            with TRACER.span("scan.drain_submit", first_page=first,
+                             num_pages=n):
                 if drain_active:
-                    put_drain(None)       # sentinel: no more batches
-                worker.join(timeout=5.0)
-                if sink.dead:
-                    stats.degraded_to_sync = True
-                sink.drain_pending(drain_q)
-                stats.drain_wait_s += time.perf_counter() - t0
+                    if put_drain((first, n, pred, batch_span)):
+                        stats.drain_wait_s += time.perf_counter() - t0
+                        return
+                    degrade_to_sync()    # dead worker: recover + go sync
+                try:
+                    sink.write(first, n, pred, batch_span)
+                except retryable as e:
+                    raise ScanFault("drain_copy_out",
+                                    attempts=self._attempts,
+                                    rows_completed=min(sink.rows_written,
+                                                       source.num_rows),
+                                    cause=e) from e
+                finally:
+                    stats.drain_wait_s += time.perf_counter() - t0
+
+        # one span per execute(); everything the loop does — dma-in,
+        # per-batch compute, the drain worker's cross-thread writes —
+        # nests under it, so one exported trace IS the scan timeline
+        with TRACER.span("scan.execute", tier=source.tier,
+                         batch_pages=batch_pages,
+                         prefetch_depth=self.prefetch_depth) as scan_span:
+            try:
+                while pending or bufs:
+                    if sink.error is not None:
+                        break             # a drained batch already
+                    #                       failed: don't pay for the
+                    #                       rest of the scan first
+                    if deadline is not None and deadline.expired:
+                        stats.deadline_hit = True
+                        TRACER.event("deadline.hit")
+                        break             # budget spent: keep what landed
+                    try:
+                        if not bufs:
+                            if not try_acquire():
+                                continue  # ladder adjusted the plan
+                        cur = bufs.popleft()
+                        # batch i+1: issue its page DMA while batch i
+                        # computes.  The prefetch acquire runs BEFORE the
+                        # batch span opens so next-batch scan.dma_in spans
+                        # parent to scan.execute, not to a batch they
+                        # don't belong to.
+                        while len(bufs) + 1 < depth and pending:
+                            if not try_acquire():
+                                break     # ladder adjusted the plan
+                        with TRACER.span("scan.batch", index=batch_idx,
+                                         first_page=cur.first_page,
+                                         num_pages=cur.num_pages
+                                         ) as batch_span:
+                            t0 = time.perf_counter()
+                            with TRACER.span("scan.transfer_wait"):
+                                jax.block_until_ready(cur.block)
+                            stats.transfer_wait_s += \
+                                time.perf_counter() - t0
+                            t0 = time.perf_counter()
+                            try:
+                                with TRACER.span("scan.compute"):
+                                    state, reps = self._guard(
+                                        lambda: run_stages(
+                                            self.stages,
+                                            {"x": cur.block}),
+                                        "kernel_launch", stats)
+                            except retryable as e:
+                                raise ScanFault(
+                                    "kernel_launch",
+                                    attempts=self._attempts,
+                                    rows_completed=min(sink.rows_written,
+                                                       source.num_rows),
+                                    cause=e) from e
+                            stats.compute_s += time.perf_counter() - t0
+                            reports.extend(reps)
+                            stats.batches += 1
+                            batch_idx += 1
+                            submit(cur.first_page, cur.num_pages,
+                                   state[self.result_key], batch_span)
+                        # release the page buffer NOW: some plans thread
+                        # "x" through to the final stage output, so
+                        # dropping `state` (not just cur.block) is what
+                        # actually frees the device pages — else a third
+                        # buffer would be alive during the next prefetch
+                        state = None
+                        cur.block = None          # at most 2 ever live
+                        live -= 1
+                    except DeadlineExceeded:
+                        # budget expired inside a retry loop: same
+                        # graceful exit as the between-batches check
+                        stats.deadline_hit = True
+                        TRACER.event("deadline.hit")
+                        break
+            finally:
+                # shut the worker down on EVERY exit: a failing stage
+                # (or the in-flight assert) must not strand the daemon
+                # thread in q.get() pinning the result buffer for the
+                # process lifetime.  put_drain (not a blocking put) so a
+                # dead worker + full queue cannot deadlock the shutdown
+                # either; drain_pending then recovers anything a dead
+                # worker left behind.
+                if async_drain:
+                    t0 = time.perf_counter()
+                    if drain_active:
+                        put_drain(None)   # sentinel: no more batches
+                    worker.join(timeout=5.0)
+                    if sink.dead:
+                        stats.degraded_to_sync = True
+                    sink.drain_pending(drain_q)
+                    stats.drain_wait_s += time.perf_counter() - t0
+                scan_span.set(batches=stats.batches,
+                              bytes_streamed=stats.bytes_streamed,
+                              retries=stats.retries,
+                              batch_resubmits=stats.batch_resubmits,
+                              degraded_to_sync=stats.degraded_to_sync,
+                              deadline_hit=stats.deadline_hit)
+                # process-global rollups (docs/observability.md):
+                # counted on every exit — a faulted scan still counts
+                METRICS.counter("scan.batches").inc(stats.batches)
+                METRICS.counter("scan.bytes_streamed").inc(
+                    stats.bytes_streamed)
+                METRICS.counter("scan.retries").inc(stats.retries)
+                METRICS.counter("scan.batch_resubmits").inc(
+                    stats.batch_resubmits)
+                if stats.degraded_to_sync:
+                    METRICS.counter("scan.degraded_to_sync").inc()
+                if stats.deadline_hit:
+                    METRICS.counter("scan.deadline_hits").inc()
         if self.injector is not None:
             stats.faults_injected = self.injector.total_fired - fired0
+            METRICS.counter("scan.faults_injected").inc(
+                stats.faults_injected)
         if sink.error is not None:
             e = sink.error
             if isinstance(e, retryable):

@@ -55,6 +55,8 @@ from typing import Any, Callable
 
 import numpy as np
 
+from repro.obs import TRACER
+
 __all__ = ["FAULT_SITES", "InjectedFault", "ScanFault", "DeadlineExceeded",
            "FaultInjector", "RetryPolicy", "Deadline", "DegradedReport"]
 
@@ -182,6 +184,10 @@ class FaultInjector:
             hit = bool(rule.rng.random() < rule.probability)
         if hit:
             rule.fired += 1
+            # observability: an armed site firing is a span event on the
+            # enclosing span (`fault.injected`, docs/observability.md) —
+            # traces show exactly which call of which site faulted
+            TRACER.event("fault.injected", site=site, call=call)
             raise InjectedFault(site, call)
 
     @property
@@ -301,6 +307,9 @@ class RetryPolicy:
                     raise DeadlineExceeded(site, cause=e)
                 if on_retry is not None:
                     on_retry()
+                # every re-attempt is a `retry` span event, so exported
+                # traces carry the exact per-site retry counts
+                TRACER.event("retry", site=site, attempt=attempt)
                 pause = self.backoff_s(site, attempt)
                 if deadline is not None:
                     pause = min(pause, deadline.remaining())

@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import METRICS, TRACER
+
 __all__ = [
     "LoadTiming",
     "DATASETS",
@@ -125,15 +127,19 @@ def write_csv(path: str, x: np.ndarray) -> None:
 def load_csv_external(path: str, *, device=None, dtype=jnp.float32,
                       injector=None, retry_policy=None):
     """Timed external load: parse CSV -> convert -> device transfer."""
+    METRICS.counter("load.external_loads").inc()
     t0 = time.perf_counter()
-    host = np.loadtxt(path, delimiter=",", dtype=np.float64, ndmin=2)
+    with TRACER.span("load.parse", format="csv"):
+        host = np.loadtxt(path, delimiter=",", dtype=np.float64, ndmin=2)
     t1 = time.perf_counter()
-    host32 = np.ascontiguousarray(host, dtype=np.float32)
+    with TRACER.span("load.convert"):
+        host32 = np.ascontiguousarray(host, dtype=np.float32)
     t2 = time.perf_counter()
-    dev = _guarded_transfer(
-        lambda: jax.device_put(jnp.asarray(host32, dtype), device),
-        injector=injector, retry_policy=retry_policy)
-    dev.block_until_ready()
+    with TRACER.span("load.transfer"):
+        dev = _guarded_transfer(
+            lambda: jax.device_put(jnp.asarray(host32, dtype), device),
+            injector=injector, retry_policy=retry_policy)
+        dev.block_until_ready()
     t3 = time.perf_counter()
     return dev, LoadTiming(parse_s=t1 - t0, convert_s=t2 - t1,
                            transfer_s=t3 - t2, total_s=t3 - t0)
@@ -182,22 +188,26 @@ def load_libsvm_external(path: str, num_features: int, *, device=None,
     This is the DENSE-FALLBACK baseline; ``load_libsvm_csr_external`` is
     the sparse data plane's path, which skips the densify entirely.
     """
+    METRICS.counter("load.external_loads").inc()
     t0 = time.perf_counter()
-    indptr, indices, values, labels = _parse_libsvm(path)
-    indptr_np = np.asarray(indptr, np.int64)
-    indices_np = np.asarray(indices, np.int64)
-    values_np = np.asarray(values, np.float32)
+    with TRACER.span("load.parse", format="libsvm"):
+        indptr, indices, values, labels = _parse_libsvm(path)
+        indptr_np = np.asarray(indptr, np.int64)
+        indices_np = np.asarray(indices, np.int64)
+        values_np = np.asarray(values, np.float32)
     t1 = time.perf_counter()
-    n = len(labels)
-    fill = np.nan if missing_as_nan else 0.0
-    dense = np.full((n, num_features), fill, np.float32)
-    rows = np.repeat(np.arange(n), np.diff(indptr_np))
-    dense[rows, indices_np] = values_np
+    with TRACER.span("load.convert", densify=True):
+        n = len(labels)
+        fill = np.nan if missing_as_nan else 0.0
+        dense = np.full((n, num_features), fill, np.float32)
+        rows = np.repeat(np.arange(n), np.diff(indptr_np))
+        dense[rows, indices_np] = values_np
     t2 = time.perf_counter()
-    dev = _guarded_transfer(
-        lambda: jax.device_put(jnp.asarray(dense, dtype), device),
-        injector=injector, retry_policy=retry_policy)
-    dev.block_until_ready()
+    with TRACER.span("load.transfer"):
+        dev = _guarded_transfer(
+            lambda: jax.device_put(jnp.asarray(dense, dtype), device),
+            injector=injector, retry_policy=retry_policy)
+        dev.block_until_ready()
     t3 = time.perf_counter()
     timing = LoadTiming(parse_s=t1 - t0, convert_s=t2 - t1,
                         transfer_s=t3 - t2, total_s=t3 - t0)
@@ -250,33 +260,39 @@ def load_libsvm_csr_external(path: str, num_features: int, *,
 
     if tier not in ("device", "host", "disk"):
         raise ValueError(f"unknown tier {tier!r}")
+    METRICS.counter("load.external_loads").inc()
     t0 = time.perf_counter()
-    indptr, indices, values, labels = _parse_libsvm(path)
+    with TRACER.span("load.parse", format="libsvm-csr"):
+        indptr, indices, values, labels = _parse_libsvm(path)
     t1 = time.perf_counter()
-    ip, ix, vl = paginate_csr(
-        np.asarray(indptr, np.int64), np.asarray(indices, np.int32),
-        np.asarray(values, np.float32), num_rows=len(labels),
-        page_rows=page_rows, n_features=num_features,
-        pages_multiple=pages_multiple)
-    if tier == "disk":
-        import tempfile
-        d = spill_dir or tempfile.mkdtemp(prefix="libsvm-disk-")
-        stem = os.path.splitext(os.path.basename(path))[0]
-        ip, ix, vl = (mmap_array(os.path.join(d, f"{stem}.{lbl}.bin"), a)
-                      for lbl, a in
-                      (("indptr", ip), ("indices", ix), ("values", vl)))
+    with TRACER.span("load.convert", tier=tier):
+        ip, ix, vl = paginate_csr(
+            np.asarray(indptr, np.int64), np.asarray(indices, np.int32),
+            np.asarray(values, np.float32), num_rows=len(labels),
+            page_rows=page_rows, n_features=num_features,
+            pages_multiple=pages_multiple)
+        if tier == "disk":
+            import tempfile
+            d = spill_dir or tempfile.mkdtemp(prefix="libsvm-disk-")
+            stem = os.path.splitext(os.path.basename(path))[0]
+            ip, ix, vl = (mmap_array(os.path.join(d, f"{stem}.{lbl}.bin"), a)
+                          for lbl, a in
+                          (("indptr", ip), ("indices", ix), ("values", vl)))
     t2 = time.perf_counter()
     if tier in ("host", "disk"):
         pages = CSRPages(indptr=ip, indices=ix, values=vl,
                          n_features=int(num_features))
         t3 = t2               # no device transfer: transfer_s == 0
     else:
-        pages = _guarded_transfer(
-            lambda: CSRPages(indptr=jnp.asarray(ip), indices=jnp.asarray(ix),
-                             values=jnp.asarray(vl),
-                             n_features=int(num_features)),
-            injector=injector, retry_policy=retry_policy)
-        jax.block_until_ready((pages.indptr, pages.indices, pages.values))
+        with TRACER.span("load.transfer"):
+            pages = _guarded_transfer(
+                lambda: CSRPages(indptr=jnp.asarray(ip),
+                                 indices=jnp.asarray(ix),
+                                 values=jnp.asarray(vl),
+                                 n_features=int(num_features)),
+                injector=injector, retry_policy=retry_policy)
+            jax.block_until_ready((pages.indptr, pages.indices,
+                                   pages.values))
         t3 = time.perf_counter()
     timing = LoadTiming(parse_s=t1 - t0, convert_s=t2 - t1,
                         transfer_s=t3 - t2, total_s=t3 - t0)
@@ -300,16 +316,20 @@ def load_array_rows_external(path: str, *, device=None, dtype=jnp.float32):
     """Timed array-column load; the expensive step is the per-row array
     parse + stack (the paper's 'converting a PostgreSQL array type back to
     a NumPy array ... becomes the bottleneck')."""
+    METRICS.counter("load.external_loads").inc()
     t0 = time.perf_counter()
-    rows = []
-    with open(path) as fh:
-        for line in fh:
-            rows.append(np.fromstring(line.strip()[1:-1], sep=","))
+    with TRACER.span("load.parse", format="array-rows"):
+        rows = []
+        with open(path) as fh:
+            for line in fh:
+                rows.append(np.fromstring(line.strip()[1:-1], sep=","))
     t1 = time.perf_counter()
-    host = np.stack(rows).astype(np.float32)
+    with TRACER.span("load.convert"):
+        host = np.stack(rows).astype(np.float32)
     t2 = time.perf_counter()
-    dev = jax.device_put(jnp.asarray(host, dtype), device)
-    dev.block_until_ready()
+    with TRACER.span("load.transfer"):
+        dev = jax.device_put(jnp.asarray(host, dtype), device)
+        dev.block_until_ready()
     t3 = time.perf_counter()
     return dev, LoadTiming(parse_s=t1 - t0, convert_s=t2 - t1,
                            transfer_s=t3 - t2, total_s=t3 - t0)

@@ -24,14 +24,51 @@ from typing import Any, Callable, Sequence
 
 import jax
 
+from repro.obs import METRICS, TRACER
+
 __all__ = ["Operator", "Stage", "StageReport", "ndevices", "run_stages",
            "TRACE_STATS"]
 
 # Tracing telemetry: a stage's fused body runs as Python only while jax.jit
 # TRACES it (cache hits go straight to the compiled executable), so this
 # counter counts (re)traces — the compiled-plan cache's "no re-tracing"
-# guarantee is asserted against it.
-TRACE_STATS = {"traces": 0}
+# guarantee is asserted against it.  Lives in the process-global metrics
+# registry as ``plan.traces`` (docs/observability.md).
+_TRACES = METRICS.counter("plan.traces")
+
+
+class _TraceStatsView:
+    """Backwards-compat dict facade over the ``plan.traces`` counter.
+
+    The pre-obs API was a mutable module-global ``TRACE_STATS`` dict;
+    callers that still read (or ``+=``-increment) ``TRACE_STATS
+    ["traces"]`` keep working against the registry counter.  New code
+    should use ``obs.METRICS.counter("plan.traces")`` directly.
+    """
+
+    _KEY = "traces"
+
+    def __getitem__(self, key: str) -> int:
+        if key != self._KEY:
+            raise KeyError(key)
+        return _TRACES.value
+
+    def __setitem__(self, key: str, value: int) -> None:
+        if key != self._KEY:
+            raise KeyError(key)
+        _TRACES.set(value)
+
+    def get(self, key: str, default=None):
+        return _TRACES.value if key == self._KEY else default
+
+    def keys(self):
+        return (self._KEY,)
+
+    def __repr__(self) -> str:
+        return f"{{'traces': {_TRACES.value}}}"
+
+
+TRACE_STATS = _TraceStatsView()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,7 +123,7 @@ class Stage:
 
     def __post_init__(self):
         def fused(state):
-            TRACE_STATS["traces"] += 1
+            _TRACES.inc()
             for op in self.operators:
                 state = op.fn(state)
             return state
@@ -94,8 +131,12 @@ class Stage:
 
     def run(self, state):
         t0 = time.perf_counter()
-        out = self._fn(state)
-        jax.block_until_ready(out)   # stage boundary materializes
+        # the kernel-launch leaf of the span tree: one span per stage
+        # per batch, so Perfetto shows exactly which stage of which
+        # batch the wall went to (name documented as the `stage:` prefix)
+        with TRACER.span(f"stage:{self.name}"):
+            out = self._fn(state)
+            jax.block_until_ready(out)   # stage boundary materializes
         dt = time.perf_counter() - t0
         report = StageReport(
             name=self.name,

@@ -107,6 +107,7 @@ from repro.db.operators import (Operator, StageReport, ndevices,
                                 split_into_stages)
 from repro.db.store import TensorBlockStore
 from repro.dist.sharding import ForestShardingPlan, make_forest_plan
+from repro.obs import METRICS, TRACER, TraceSummary
 from repro.kernels.gather import csr_block_to_dense, gather_inverse_map
 from repro.kernels.ops import default_tree_block
 
@@ -137,6 +138,10 @@ class QueryResult:
     #                                   PARTIAL (deadline_s expired):
     #                                   scored rows are exact, missing
     #                                   rows are NaN, row_mask says which
+    trace: TraceSummary | None = None  # per-query span rollup when the
+    #                                   obs TRACER is enabled (else None);
+    #                                   the full span tree is exportable
+    #                                   via TRACER.export_chrome()
 
     def breakdown(self) -> dict[str, float]:
         return {
@@ -279,6 +284,16 @@ class ForestQueryEngine:
     def _partition_model(self, forest: Forest, algorithm: str,
                          num_parts: int, *,
                          storage_format: str = "dense") -> MaterializedModel:
+        with TRACER.span("plan.partition", algorithm=algorithm,
+                         num_parts=num_parts,
+                         storage_format=storage_format):
+            return self._partition_model_impl(
+                forest, algorithm, num_parts, storage_format=storage_format)
+
+    def _partition_model_impl(self, forest: Forest, algorithm: str,
+                              num_parts: int, *,
+                              storage_format: str = "dense"
+                              ) -> MaterializedModel:
         aux: dict[str, Any] = {}
         if storage_format == "csr":
             forest, inv_map, f_used = self._sparse_prepass(forest)
@@ -507,7 +522,32 @@ class ForestQueryEngine:
     # ------------------------------------------------------------------
     # entry point
     # ------------------------------------------------------------------
-    def infer(
+    def infer(self, dataset: str, forest: Forest, **kw) -> QueryResult:
+        """Run the end-to-end inference query — see ``_infer`` for the
+        full parameter contract.  This wrapper is the observability
+        boundary: with ``obs.TRACER`` enabled the whole query runs under
+        a ``query.infer`` root span and the result carries a
+        ``TraceSummary`` (per-phase wall totals + the ``METRICS``
+        counter deltas the query accrued) at ``QueryResult.trace``;
+        disabled (the default), it is a tail call with zero overhead.
+        """
+        if not TRACER.enabled:
+            return self._infer(dataset, forest, **kw)
+        mark = TRACER.mark()
+        before = METRICS.counter_values()
+        with TRACER.span("query.infer", dataset=dataset,
+                         plan=kw.get("plan", "udf"),
+                         algorithm=kw.get("algorithm", "predicated")
+                         ) as root:
+            res = self._infer(dataset, forest, **kw)
+            root.set(tier=res.tier, storage_format=res.storage_format,
+                     reuse_hit=res.reuse_hit)
+        res.trace = TRACER.summarize(
+            root, since=mark, counters_before=before,
+            counters_now=METRICS.counter_values())
+        return res
+
+    def _infer(
         self,
         dataset: str,
         forest: Forest,
@@ -602,17 +642,19 @@ class ForestQueryEngine:
                     mesh_id)
 
             def build_udf() -> CompiledQueryPlan:
-                f, sparse_aux = forest, None
-                if fmt == "csr":
-                    cf, inv_map, f_used = self._sparse_prepass(forest)
-                    f = cf
-                    sparse_aux = (inv_map, f_used)
-                fp, true_T = pad_trees(f, 1)
-                stages = split_into_stages(
-                    self._udf_ops(fp, algorithm, true_T,
-                                  sparse_aux=sparse_aux))
-                return CompiledQueryPlan(stages=stages,
-                                         num_stages=len(stages))
+                with TRACER.span("plan.build", plan="udf",
+                                 algorithm=algorithm, storage_format=fmt):
+                    f, sparse_aux = forest, None
+                    if fmt == "csr":
+                        cf, inv_map, f_used = self._sparse_prepass(forest)
+                        f = cf
+                        sparse_aux = (inv_map, f_used)
+                    fp, true_T = pad_trees(f, 1)
+                    stages = split_into_stages(
+                        self._udf_ops(fp, algorithm, true_T,
+                                      sparse_aux=sparse_aux))
+                    return CompiledQueryPlan(stages=stages,
+                                             num_stages=len(stages))
 
             before = self.plan_cache.stats.hits
             qplan = self.plan_cache.get_or_build(pkey, build_udf)
@@ -656,11 +698,14 @@ class ForestQueryEngine:
                         batch_sig, mesh_id, id(mat))
 
                 def build_rel() -> CompiledQueryPlan:
-                    stages = split_into_stages(
-                        self._rel_ops(mat, algorithm, n_parts))
-                    return CompiledQueryPlan(stages=stages,
-                                             num_stages=len(stages) + 1,
-                                             mat=mat)
+                    with TRACER.span("plan.build", plan="rel+reuse",
+                                     algorithm=algorithm,
+                                     storage_format=fmt):
+                        stages = split_into_stages(
+                            self._rel_ops(mat, algorithm, n_parts))
+                        return CompiledQueryPlan(stages=stages,
+                                                 num_stages=len(stages) + 1,
+                                                 mat=mat)
 
                 before = self.plan_cache.stats.hits
                 qplan = self.plan_cache.get_or_build(pkey, build_rel)
@@ -672,6 +717,12 @@ class ForestQueryEngine:
                                           num_stages=len(stages) + 1)
 
         reuse_hit = model_hit or plan_hit
+        if plan != "rel":
+            # the compiled-plan cache was consulted (rel is the paper's
+            # deliberately uncached baseline — no consult, no count)
+            METRICS.counter("plan.cache_hits" if plan_hit
+                            else "plan.cache_misses").inc()
+            TRACER.event("plan.cache", hit=plan_hit, plan=plan)
 
         # F3 batching through the streaming scan executor: ONE loop for
         # every plan/format/tier.  Host-tier pages double-buffer their
@@ -706,8 +757,10 @@ class ForestQueryEngine:
         write_s = 0.0
         if write_as is not None:
             t0 = time.perf_counter()
-            out = self.store.put_result(write_as, predictions, ds.num_rows)
-            jax.block_until_ready(out.data)
+            with TRACER.span("query.write", dataset=write_as):
+                out = self.store.put_result(write_as, predictions,
+                                            ds.num_rows)
+                jax.block_until_ready(out.data)
             write_s = time.perf_counter() - t0
 
         total_s = time.perf_counter() - t_query0

@@ -74,6 +74,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.db.faults import (FaultInjector, InjectedFault, RetryPolicy,
                              ScanFault)
 from repro.db.sparse import CSRPages, csr_from_dense, paginate_csr
+from repro.obs import METRICS, TRACER
 
 __all__ = ["StoredDataset", "SparseStoredDataset", "TensorBlockStore",
            "mmap_array", "TIERS"]
@@ -365,7 +366,18 @@ class TensorBlockStore:
         return "disk"
 
     # -- ingestion ----------------------------------------------------------
-    def put(
+    def put(self, name: str, data, **kw) -> StoredDataset:
+        """Ingest [N, F] dense rows — see ``_put_impl`` for the full
+        contract.  Instrumented: a ``store.put`` span (its ``tier`` attr
+        is the RESOLVED tier, so auto-cascade spills are visible per
+        ingest) and the ``store.puts`` counter."""
+        with TRACER.span("store.put", dataset=name) as sp:
+            ds = self._put_impl(name, data, **kw)
+            sp.set(tier=ds.tier)
+        METRICS.counter("store.puts").inc()
+        return ds
+
+    def _put_impl(
         self,
         name: str,
         data: np.ndarray | jax.Array,
@@ -411,7 +423,18 @@ class TensorBlockStore:
         self._datasets[name] = ds
         return ds
 
-    def put_sparse(
+    def put_sparse(self, name: str, data=None, **kw
+                   ) -> SparseStoredDataset:
+        """Ingest a CSR dataset — see ``_put_sparse_impl`` for the full
+        contract.  Instrumented like ``put`` (``store.put_sparse`` span
+        with the resolved tier + the ``store.puts`` counter)."""
+        with TRACER.span("store.put_sparse", dataset=name) as sp:
+            ds = self._put_sparse_impl(name, data, **kw)
+            sp.set(tier=ds.tier)
+        METRICS.counter("store.puts").inc()
+        return ds
+
+    def _put_sparse_impl(
         self,
         name: str,
         data: np.ndarray | None = None,
@@ -532,6 +555,18 @@ class TensorBlockStore:
 
     # -- tier migration -----------------------------------------------------
     def move(self, name: str, tier: str):
+        """Migrate a dataset between tiers — see ``_move_impl`` for the
+        full contract (rollback semantics included).  Instrumented: a
+        ``store.move`` span carrying the from/to rungs and the
+        ``store.moves`` counter (counted per ATTEMPT — a rolled-back
+        move still counts, its span's ``error`` attr marks it)."""
+        src_tier = self.get(name).tier
+        METRICS.counter("store.moves").inc()
+        with TRACER.span("store.move", dataset=name,
+                         src=src_tier, dst=tier):
+            return self._move_impl(name, tier)
+
+    def _move_impl(self, name: str, tier: str):
         """Migrate a dataset between any two tiers of the ladder
         (eviction: device -> host -> disk; promotion: the reverse).  Page
         layout is preserved exactly, so the page↔batch mapping — and

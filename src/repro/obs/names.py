@@ -1,0 +1,87 @@
+"""The canonical catalog of exported span / event / metric names.
+
+Instrumentation across the data plane imports its names from nowhere —
+names are string literals at the call sites — but THIS module is the
+authoritative list of what the observability plane exports, and
+``benchmarks/check_docs.py`` (stdlib-only CI gate) asserts every name
+below appears, in backticks, in ``docs/observability.md``.  Add an
+instrument without cataloging + documenting it and CI fails.
+
+``SPAN_PREFIXES`` covers dynamically named spans (per-stage spans are
+``stage:<stage name>`` — the stage names themselves are plan-derived).
+"""
+
+from __future__ import annotations
+
+__all__ = ["SPAN_NAMES", "SPAN_PREFIXES", "EVENT_NAMES", "METRIC_NAMES"]
+
+#: every statically named span the instrumentation can emit
+SPAN_NAMES = (
+    # query engine (db/query.py)
+    "query.infer",
+    "plan.build",
+    "plan.partition",
+    "query.write",
+    # streaming scan executor (db/executor.py)
+    "scan.execute",
+    "scan.batch",
+    "scan.disk_read",
+    "scan.dma_in",
+    "scan.transfer_wait",
+    "scan.compute",
+    "scan.drain_submit",
+    "scan.drain_write",
+    # tensor-block store (db/store.py)
+    "store.put",
+    "store.put_sparse",
+    "store.move",
+    # external loaders (db/loader.py)
+    "load.parse",
+    "load.convert",
+    "load.transfer",
+    # serving plane (serve/engine.py)
+    "serve.prefill",
+    "serve.execute",
+)
+
+#: prefixes of dynamically named spans
+SPAN_PREFIXES = (
+    "stage:",            # per-pipeline-stage spans (db/operators.Stage.run)
+)
+
+#: every span-event (instant) name
+EVENT_NAMES = (
+    "fault.injected",    # FaultInjector.fire hit an armed site
+    "retry",             # RetryPolicy re-attempt at a site
+    "degrade.sync_drain",   # drain-worker death -> mid-scan sync fallback
+    "batch.resubmit",    # disk-read re-enqueue / transfer halving ladder
+    "deadline.hit",      # cooperative deadline stopped the scan
+    "plan.cache",        # compiled-plan cache consulted (hit= attr)
+    "serve.shed",        # admission timeout demoted a request to batch
+)
+
+#: every process-global METRICS counter (and the serve engine's
+#: per-engine histogram names)
+METRIC_NAMES = (
+    # plan / tracing accounting (db/operators.py, db/query.py)
+    "plan.traces",
+    "plan.cache_hits",
+    "plan.cache_misses",
+    # streaming scan rollups (db/executor.py)
+    "scan.batches",
+    "scan.bytes_streamed",
+    "scan.retries",
+    "scan.faults_injected",
+    "scan.batch_resubmits",
+    "scan.degraded_to_sync",
+    "scan.deadline_hits",
+    # store / loader (db/store.py, db/loader.py)
+    "store.puts",
+    "store.moves",
+    "load.external_loads",
+    # serving plane (serve/engine.py, per-engine registry)
+    "serve.requests",
+    "serve.shed",
+    "serve.queue_wait_s",
+    "serve.e2e_latency_s",
+)

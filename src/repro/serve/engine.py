@@ -30,6 +30,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import ShardingPlan, make_plan
 from repro.models.registry import get_bundle
+from repro.obs import MetricsRegistry, TRACER
 from repro.serve.router import TIER_BATCH, TIER_INTERACTIVE
 
 Params = dict[str, Any]
@@ -87,6 +88,13 @@ class ServeEngine:
         self._uid = 0
         self.ticks = 0
         self.shed_count = 0            # admission timeouts shed to batch
+        # per-engine observability (one ServeEngine per pod shares
+        # nothing — so its metrics registry is its own, not the process
+        # global): fixed-bucket latency histograms back the p50/p99
+        # fields of stats(), counters mirror the scalar telemetry
+        self.metrics = MetricsRegistry()
+        self._queue_wait_h = self.metrics.histogram("serve.queue_wait_s")
+        self._e2e_h = self.metrics.histogram("serve.e2e_latency_s")
 
         self._decode = jax.jit(
             lambda p, c, t: self.bundle.decode(cfg, p, c, t, self.splan))
@@ -142,6 +150,7 @@ class ServeEngine:
             self._queue.appendleft(req)
         else:
             self._queue.append(req)
+        self.metrics.counter("serve.requests").inc()
         return req.uid
 
     def _shed_timed_out(self) -> None:
@@ -163,19 +172,28 @@ class ServeEngine:
         if shed:
             self._queue = deque(kept + shed)
             self.shed_count += len(shed)
+            self.metrics.counter("serve.shed").inc(len(shed))
+            for req in shed:
+                TRACER.event("serve.shed", uid=req.uid)
 
     def _admit_one(self, req: Request, slot: int) -> None:
-        P = len(req.prompt)
-        b = _bucket(P, self.buckets) if self.buckets else P
-        if b not in self._prefill:
-            self._prefill[b] = jax.jit(partial(self._prefill_fn,
-                                               prompt_len=b))
-        toks = np.zeros((1, b), np.int32)
-        toks[0, b - P:] = req.prompt           # left-pad into the bucket
-        logits, cache1 = self._prefill[b](self.params, jnp.asarray(toks))
-        first = int(jnp.argmax(logits[0]))
-        self.caches, self._cur_tokens = self._insert(
-            self.caches, self._cur_tokens, cache1, slot, b, first)
+        # admission ends the queue wait — recorded whether or not the
+        # request was shed on the way in
+        self._queue_wait_h.record(time.perf_counter() - req.submitted_at)
+        with TRACER.span("serve.prefill", uid=req.uid, slot=slot,
+                         shed=req.shed):
+            P = len(req.prompt)
+            b = _bucket(P, self.buckets) if self.buckets else P
+            if b not in self._prefill:
+                self._prefill[b] = jax.jit(partial(self._prefill_fn,
+                                                   prompt_len=b))
+            toks = np.zeros((1, b), np.int32)
+            toks[0, b - P:] = req.prompt       # left-pad into the bucket
+            logits, cache1 = self._prefill[b](self.params,
+                                              jnp.asarray(toks))
+            first = int(jnp.argmax(logits[0]))
+            self.caches, self._cur_tokens = self._insert(
+                self.caches, self._cur_tokens, cache1, slot, b, first)
         req.tokens.append(first)
         req.first_token_at = time.perf_counter()
         self._active[slot] = req
@@ -189,11 +207,13 @@ class ServeEngine:
             self._admit_one(self._queue.popleft(), self._free.pop())
         if not self._active:
             return []
-        logits, self.caches = self._decode(self.params, self.caches,
-                                           self._cur_tokens)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self._cur_tokens = nxt[:, None]
-        nxt_np = np.asarray(jax.device_get(nxt))
+        with TRACER.span("serve.execute", tick=self.ticks,
+                         active=len(self._active)):
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               self._cur_tokens)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self._cur_tokens = nxt[:, None]
+            nxt_np = np.asarray(jax.device_get(nxt))
         self.ticks += 1
         finished = []
         for slot, req in list(self._active.items()):
@@ -206,6 +226,7 @@ class ServeEngine:
             if self._remaining[slot] <= 0 or tok == req.eos_token \
                     or idx >= self.max_ctx - 1:
                 req.finished_at = time.perf_counter()
+                self._e2e_h.record(req.finished_at - req.submitted_at)
                 finished.append(req)
                 self._done.append(req)
                 del self._active[slot]
@@ -237,4 +258,11 @@ class ServeEngine:
             "tokens_per_s": toks / max(span, 1e-9),
             "ticks": self.ticks,
             "shed": self.shed_count,
+            # bucket-interpolated tails from the per-engine histograms
+            # (obs.Histogram; docs/observability.md) — queue wait is
+            # submit -> admission, e2e is submit -> last token
+            "p50_queue_wait_s": self._queue_wait_h.percentile(50),
+            "p99_queue_wait_s": self._queue_wait_h.percentile(99),
+            "p50_latency_s": self._e2e_h.percentile(50),
+            "p99_latency_s": self._e2e_h.percentile(99),
         }

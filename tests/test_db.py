@@ -20,7 +20,7 @@ from repro.core.train import TrainConfig, train_forest
 from repro.db.loader import (load_array_rows_external, load_csv_external,
                              load_libsvm_external, synth_dataset,
                              write_array_rows, write_csv, write_libsvm)
-from repro.db.operators import TRACE_STATS
+from repro.obs import METRICS
 from repro.db.query import ForestQueryEngine
 from repro.db.store import TensorBlockStore
 
@@ -105,13 +105,14 @@ def test_compiled_plan_cache_no_retrace(setup, plan):
               model_id="plan-cache-m1")
     r1 = engine.infer("test", forest, **kw)
     assert not r1.plan_reuse_hit
-    traces_after_first = TRACE_STATS["traces"]
+    traces_after_first = METRICS.counter("plan.traces").value
     assert traces_after_first > 0
 
     r2 = engine.infer("test", forest, **kw)
     assert r2.reuse_hit and r2.plan_reuse_hit
     assert r2.partition_s == 0.0
-    assert TRACE_STATS["traces"] == traces_after_first, "stage re-traced"
+    assert METRICS.counter("plan.traces").value == traces_after_first, \
+        "stage re-traced"
     np.testing.assert_allclose(np.asarray(r1.predictions),
                                np.asarray(r2.predictions))
 

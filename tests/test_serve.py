@@ -122,6 +122,31 @@ def test_admission_timeout_sheds_to_batch_tier(served):
     assert len(done) == 3 and len(req3.tokens) == 2
 
 
+def test_stats_percentiles_from_histograms(served):
+    """stats() p50/p99 fields come from the per-engine fixed-bucket
+    histograms (docs/observability.md): queue wait is submit ->
+    admission, e2e is submit -> last token, tails ordered and clamped
+    to the observed latency range."""
+    cfg, _, params = served
+    rng = np.random.default_rng(5)
+    engine = ServeEngine(cfg, params, slots=2, max_ctx=64,
+                         prompt_buckets=(8,), dtype=jnp.float32)
+    for _ in range(4):
+        engine.submit(rng.integers(0, cfg.vocab_size, 4), max_new_tokens=3)
+    done = engine.run_until_drained()
+    st = engine.stats()
+    assert st["requests"] == len(done) == 4
+    assert engine.metrics.counter("serve.requests").value == 4
+    lat = sorted(r.finished_at - r.submitted_at for r in done)
+    assert 0.0 <= st["p50_queue_wait_s"] <= st["p99_queue_wait_s"]
+    assert 0.0 < st["p50_latency_s"] <= st["p99_latency_s"]
+    # bucket interpolation is clamped to the observed min/max
+    assert lat[0] <= st["p50_latency_s"] <= lat[-1]
+    assert st["p99_latency_s"] <= lat[-1]
+    h = engine.metrics.histogram("serve.e2e_latency_s")
+    assert h.count == 4 and h.summary()["p99"] == st["p99_latency_s"]
+
+
 # ---------------------------------------------------------------------------
 # forest router
 # ---------------------------------------------------------------------------
