@@ -36,9 +36,17 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 DOC = ROOT / "docs" / "benchmarks.md"
 OBS_DOC = ROOT / "docs" / "observability.md"
 
+SERVE_DOC = ROOT / "docs" / "serving.md"
+
 #: bench files whose field contract lives in a doc other than
 #: docs/benchmarks.md
-DOC_OVERRIDES = {"BENCH_obs.json": OBS_DOC}
+DOC_OVERRIDES = {"BENCH_obs.json": OBS_DOC,
+                 "BENCH_serve.json": SERVE_DOC}
+
+#: serving-plane names (obs catalog entries prefixed ``serve.``, plus
+#: the row-level query span) must ALSO appear in docs/serving.md — the
+#: plane's own contract, on top of the observability-catalog check
+SERVE_NAME_PREFIXES = ("serve.", "query.infer_rows")
 
 
 def collect_keys(payload) -> set[str]:
@@ -121,9 +129,37 @@ def check_obs_names() -> bool:
     return failed
 
 
+def check_serve_names() -> bool:
+    """Serving-plane span/event/metric names must also be documented in
+    ``docs/serving.md`` — the serve plane's own contract doc (the
+    observability catalog check above covers docs/observability.md)."""
+    if not SERVE_DOC.exists():
+        print(f"FAIL: {SERVE_DOC.relative_to(ROOT)} does not exist")
+        return True
+    sys.path.insert(0, str(ROOT / "src"))
+    try:
+        from repro.obs import names as obs_names
+    finally:
+        sys.path.pop(0)
+    documented = _backticked(SERVE_DOC)
+    serve_names = sorted(
+        n for catalog in (obs_names.SPAN_NAMES, obs_names.EVENT_NAMES,
+                          obs_names.METRIC_NAMES)
+        for n in catalog if n.startswith(SERVE_NAME_PREFIXES))
+    missing = sorted(n for n in serve_names if n not in documented)
+    if missing:
+        print(f"FAIL serve-plane names missing from "
+              f"{SERVE_DOC.relative_to(ROOT)}: {', '.join(missing)}")
+        return True
+    print(f"OK   serve-plane names: all {len(serve_names)} documented "
+          f"({SERVE_DOC.relative_to(ROOT)})")
+    return False
+
+
 def main() -> int:
     failed = check_bench_files()
     failed = check_obs_names() or failed
+    failed = check_serve_names() or failed
     return 1 if failed else 0
 
 

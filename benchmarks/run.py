@@ -157,6 +157,23 @@ def main() -> None:
             f"devices={r['mesh_devices']} mesh={r['mesh']}"))
     print(f"# fused trajectory -> {fused_path}")
 
+    from benchmarks import bench_serve
+    print("\n## Online serving: open-loop coalesced vs per-request")
+    srows, serve_records = bench_serve.run(
+        trees_grid=(bench_serve.MODEL_TREES[0],) if args.fast
+        else bench_serve.MODEL_TREES,
+        duration_s=0.4 if args.fast else 1.0,
+        max_requests=400 if args.fast else 1200)
+    C.print_rows(srows, extra_cols=("rate_hz",))
+    serve_path = bench_serve.write_serve_json(serve_records)
+    for r in serve_records:
+        summary.append(C.csv_line(
+            f"serve/{r['model']}/rate{r['rate_hz']}", r["p50_ms"] / 1e3,
+            f"speedup_p50={r['speedup_p50']}x "
+            f"width={r['mean_coalesce_width']} "
+            f"retrace={0 if r['zero_retrace'] else 1}"))
+    print(f"# serve trajectory -> {serve_path}")
+
     from benchmarks import bench_conversion
     print("\n## Fig8: model conversion + loading overheads")
     rows = bench_conversion.run(trees_grid=trees)

@@ -104,14 +104,21 @@ from repro.db.executor import (DEFAULT_STREAM_BATCH_BYTES, ScanStats,
 from repro.db.faults import (Deadline, DegradedReport, FaultInjector,
                              RetryPolicy)
 from repro.db.operators import (Operator, StageReport, ndevices,
-                                split_into_stages)
+                                run_stages, split_into_stages)
 from repro.db.store import TensorBlockStore
 from repro.dist.sharding import ForestShardingPlan, make_forest_plan
 from repro.obs import METRICS, TRACER, TraceSummary
 from repro.kernels.gather import csr_block_to_dense, gather_inverse_map
 from repro.kernels.ops import default_tree_block
 
-__all__ = ["QueryResult", "CompiledQueryPlan", "ForestQueryEngine"]
+__all__ = ["QueryResult", "RowBatchResult", "CompiledQueryPlan",
+           "ForestQueryEngine"]
+
+#: sentinel occupying the DATASET slot (key[2]) of row-plan cache keys:
+#: row batches come from the serving plane, not a stored dataset, so
+#: ``store.drop`` -> ``invalidate_dataset`` must never sweep them ("#"
+#: cannot appear in a catalog name a well-behaved caller would drop).
+ROW_PLAN_DATASET = "#rows"
 
 
 @dataclasses.dataclass
@@ -151,6 +158,25 @@ class QueryResult:
             "write": self.write_s,
             "total": self.total_s,
         }
+
+
+@dataclasses.dataclass
+class RowBatchResult:
+    """Result of the row-level serving entry point (``infer_rows``).
+
+    Much lighter than ``QueryResult`` on purpose: the serving plane
+    calls this at request rate, so there is no stage-report list, no
+    scan telemetry, no per-call store round-trip — just the predictions,
+    whether the compiled plan was reused, and the wall the tick paid.
+    """
+
+    predictions: jax.Array            # [B]; masked-out padding rows are NaN
+    plan_reuse_hit: bool              # compiled-plan cache hit (zero retrace)
+    algorithm: str
+    plan: str
+    batch_rows: int                   # the padded batch signature B
+    rows_scored: int                  # real rows (row_mask True count)
+    total_s: float
 
 
 @dataclasses.dataclass
@@ -546,6 +572,123 @@ class ForestQueryEngine:
             root, since=mark, counters_before=before,
             counters_now=METRICS.counter_values())
         return res
+
+    # ------------------------------------------------------------------
+    # row-level serving entry point (serve/forest.py's hot path)
+    # ------------------------------------------------------------------
+    def infer_rows(
+        self,
+        forest: Forest,
+        x,
+        *,
+        row_mask: np.ndarray | None = None,
+        algorithm: str = "predicated",
+        plan: str = "udf",
+        model_id: str | None = None,
+        n_parts: int | None = None,
+    ) -> RowBatchResult:
+        """Score a PRE-PADDED row batch against the compiled-plan cache.
+
+        The serving plane's hot path: ``x`` is ``[B, F]`` dense rows
+        already padded to a fixed batch signature (the coalescer's
+        bucket ladder), so every call with the same ``(model, algorithm,
+        plan, B, F, mesh)`` hits an existing ``CompiledQueryPlan`` —
+        no store round-trip, no scan executor, no re-partitioning
+        (``rel+reuse`` reuses the cached ``MaterializedModel``), and in
+        the steady state ZERO re-tracing (asserted via the
+        ``plan.cache_hits``/``plan.cache_misses`` counters and
+        ``plan.traces``, exactly like ``infer``).
+
+        ``row_mask`` marks the real rows: predictions for padding rows
+        are forced to NaN so coalescer padding can never leak into a
+        caller's results.  The bare ``rel`` plan is rejected — serving
+        always runs cached executables.
+
+        On a data mesh ``B`` must divide the ``data`` axis; the batch is
+        placed under the store's ``data_sharding`` like any scan batch.
+        """
+        if plan not in ("udf", "rel+reuse"):
+            raise ValueError(
+                f"infer_rows serves cached plans only (udf / rel+reuse), "
+                f"got {plan!r}")
+        t0 = time.perf_counter()
+        x = jnp.asarray(x, jnp.float32)
+        if x.ndim != 2:
+            raise ValueError(f"expected [B, F] rows, got shape {x.shape}")
+        B, F = int(x.shape[0]), int(x.shape[1])
+        if self.fplan.n_data > 1 and B % self.fplan.n_data:
+            raise ValueError(
+                f"row batch {B} must divide the mesh data axis "
+                f"({self.fplan.n_data}) — pick bucket sizes that are "
+                f"axis multiples")
+        sharding = self.store.data_sharding()
+        if sharding is not None:
+            x = jax.device_put(x, sharding)
+        mid = self._model_key(forest, model_id)
+        mesh_id = mesh_signature(self.mesh)
+        batch_sig = (B, F)
+
+        with TRACER.span("query.infer_rows", plan=plan,
+                         algorithm=algorithm, batch_rows=B) as sp:
+            if plan == "udf":
+                pkey = ("udf-row-plan", mid, ROW_PLAN_DATASET, algorithm,
+                        "dense", batch_sig, mesh_id)
+
+                def build() -> CompiledQueryPlan:
+                    with TRACER.span("plan.build", plan="udf-rows",
+                                     algorithm=algorithm):
+                        fp, true_T = pad_trees(forest, 1)
+                        stages = split_into_stages(
+                            self._udf_ops(fp, algorithm, true_T))
+                        return CompiledQueryPlan(stages=stages,
+                                                 num_stages=len(stages))
+            else:
+                n_parts = self._resolve_n_parts(forest, algorithm, n_parts)
+                mkey = (mid, algorithm, n_parts, mesh_id, "dense")
+                mat = self.cache.get_or_build(
+                    mkey, lambda: self._partition_model(
+                        forest, algorithm, n_parts))
+                pkey = ("rel-row-plan", mid, ROW_PLAN_DATASET, algorithm,
+                        n_parts, "dense", batch_sig, mesh_id, id(mat))
+
+                def build() -> CompiledQueryPlan:
+                    with TRACER.span("plan.build", plan="rel-rows",
+                                     algorithm=algorithm):
+                        stages = split_into_stages(
+                            self._rel_ops(mat, algorithm, n_parts))
+                        return CompiledQueryPlan(stages=stages,
+                                                 num_stages=len(stages) + 1,
+                                                 mat=mat)
+
+            before = self.plan_cache.stats.hits
+            qplan = self.plan_cache.get_or_build(pkey, build)
+            plan_hit = self.plan_cache.stats.hits > before
+            METRICS.counter("plan.cache_hits" if plan_hit
+                            else "plan.cache_misses").inc()
+            TRACER.event("plan.cache", hit=plan_hit, plan=f"{plan}-rows")
+
+            state, _ = run_stages(qplan.stages, {"x": x})
+            preds = state["pred"]
+            rows_scored = B
+            if row_mask is not None:
+                mask = np.asarray(row_mask, bool)
+                if mask.shape != (B,):
+                    raise ValueError(
+                        f"row_mask shape {mask.shape} != ({B},)")
+                rows_scored = int(mask.sum())
+                # padding rows never leak: their predictions are NaN
+                preds = jnp.where(jnp.asarray(mask), preds, jnp.nan)
+            sp.set(reuse_hit=plan_hit, rows=rows_scored)
+
+        return RowBatchResult(
+            predictions=preds,
+            plan_reuse_hit=plan_hit,
+            algorithm=algorithm,
+            plan=plan,
+            batch_rows=B,
+            rows_scored=rows_scored,
+            total_s=time.perf_counter() - t0,
+        )
 
     def _infer(
         self,

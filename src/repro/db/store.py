@@ -274,6 +274,12 @@ class TensorBlockStore:
         # the store only deletes what it created)
         self._disk_paths: dict[str, list[str]] = {}
         self._datasets: dict[str, StoredDataset | SparseStoredDataset] = {}
+        # model catalog: the serving plane's tenancy anchor.  A
+        # registered model is PINNED here (the forest object stays
+        # alive, so its fingerprint-keyed cache entries stay coherent);
+        # what gets EVICTED under pressure is its compiled plans, via
+        # the engines' ModelReuseCache LRU — never the model itself.
+        self._models: dict[str, dict[str, Any]] = {}
         # drop-invalidation hooks: engines register their
         # invalidate_dataset so dropping a dataset sweeps the compiled
         # plans built against it (weakrefs — a dead engine unregisters
@@ -688,6 +694,42 @@ class TensorBlockStore:
                 else:
                     invalidated += int(fn(name) or 0)
         return invalidated
+
+    # -- model catalog (serving-plane tenancy) -------------------------------
+    def put_model(self, name: str, forest, **meta) -> dict[str, Any]:
+        """Pin a forest model in the catalog under ``name``.
+
+        The store is the system of record for WHAT is served
+        (``serve/forest.ForestServeEngine.register_model`` goes through
+        here); the engines' ``ModelReuseCache`` LRU decides what stays
+        COMPILED.  Re-putting a name replaces the pinned forest —
+        callers owning compiled plans for the old one must sweep them
+        (the serve engine does)."""
+        entry = dict(forest=forest, trees=int(forest.num_trees),
+                     depth=int(forest.depth),
+                     features=int(forest.n_features),
+                     model_type=forest.model_type, task=forest.task,
+                     created_at=time.time(), **meta)
+        self._models[name] = entry
+        return entry
+
+    def get_model(self, name: str):
+        try:
+            return self._models[name]["forest"]
+        except KeyError:
+            raise KeyError(f"model {name!r} not in store; "
+                           f"have {sorted(self._models)}")
+
+    def drop_model(self, name: str) -> bool:
+        """Unpin a model.  Compiled plans keyed on its fingerprint are
+        the caller's to sweep (``ForestQueryEngine.invalidate``) — the
+        store only owns the pin."""
+        return self._models.pop(name, None) is not None
+
+    def model_catalog(self) -> dict[str, dict[str, Any]]:
+        """Catalog view of pinned models (without the forest objects)."""
+        return {n: {k: v for k, v in e.items() if k != "forest"}
+                for n, e in self._models.items()}
 
     def __contains__(self, name: str) -> bool:
         return name in self._datasets

@@ -19,6 +19,7 @@ __all__ = ["SPAN_NAMES", "SPAN_PREFIXES", "EVENT_NAMES", "METRIC_NAMES"]
 SPAN_NAMES = (
     # query engine (db/query.py)
     "query.infer",
+    "query.infer_rows",
     "plan.build",
     "plan.partition",
     "query.write",
@@ -39,9 +40,11 @@ SPAN_NAMES = (
     "load.parse",
     "load.convert",
     "load.transfer",
-    # serving plane (serve/engine.py)
+    # serving plane (serve/engine.py, serve/forest.py)
     "serve.prefill",
     "serve.execute",
+    "serve.tick",
+    "serve.coalesce",
 )
 
 #: prefixes of dynamically named spans
@@ -79,9 +82,17 @@ METRIC_NAMES = (
     "store.puts",
     "store.moves",
     "load.external_loads",
-    # serving plane (serve/engine.py, per-engine registry)
+    # serving plane (serve/engine.py + serve/forest.py; per-engine /
+    # per-model registries except serve.queue_depth, which is the
+    # process-global arrival-load gauge the router reads)
     "serve.requests",
     "serve.shed",
     "serve.queue_wait_s",
     "serve.e2e_latency_s",
+    "serve.queue_depth",
+    "serve.ticks",
+    "serve.coalesce_width",
+    "serve.padding_rows",
+    "serve.plan_hits",
+    "serve.plan_misses",
 )

@@ -1,1 +1,3 @@
-"""Serving layer: continuous-batching engine + forest request router."""
+"""Serving layer: continuous-batching LM engine, forest request router,
+and the online forest serving plane (micro-batch coalescing onto the
+compiled-plan cache — serve/forest.py, docs/serving.md)."""

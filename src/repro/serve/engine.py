@@ -30,8 +30,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import ShardingPlan, make_plan
 from repro.models.registry import get_bundle
-from repro.obs import MetricsRegistry, TRACER
-from repro.serve.router import TIER_BATCH, TIER_INTERACTIVE
+from repro.obs import METRICS, MetricsRegistry, TRACER
+from repro.serve.router import (QUEUE_DEPTH_METRIC, TIER_BATCH,
+                                TIER_INTERACTIVE)
 
 Params = dict[str, Any]
 
@@ -42,7 +43,9 @@ class Request:
     prompt: np.ndarray                 # [P] int32
     max_new_tokens: int = 16
     eos_token: int = -1                # -1: never stop early
-    priority: int = 1                  # router tier (0 = interactive)
+    priority: int = TIER_BATCH         # router tier (TIER_INTERACTIVE
+    #                                    jumps the queue; the default
+    #                                    matches submit()'s)
     submitted_at: float = 0.0
     timeout_s: float | None = None     # admission timeout: an interactive
     #                                    request still queued past this
@@ -133,24 +136,28 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, *, max_new_tokens: int = 16,
-               eos_token: int = -1, priority: int = 1,
+               eos_token: int = -1, priority: int = TIER_BATCH,
                timeout_s: float | None = None) -> int:
         """Queue a request.  ``timeout_s`` is the per-request admission
-        timeout: an interactive (tier-0) request still waiting past it
-        is SHED to the batch tier — demoted to the queue back with
-        ``shed=True`` — rather than holding the queue front forever
-        (the serve plane's degradation ladder; docs/reliability.md)."""
+        timeout: an interactive (``TIER_INTERACTIVE``) request still
+        waiting past it is SHED to the batch tier — demoted to the
+        queue back with ``shed=True`` — rather than holding the queue
+        front forever (the serve plane's degradation ladder;
+        docs/reliability.md)."""
         self._uid += 1
         req = Request(self._uid, np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens, eos_token=eos_token,
                       priority=priority, submitted_at=time.perf_counter(),
                       timeout_s=timeout_s)
-        # priority admission: interactive (0) requests jump the queue
+        # priority admission: interactive requests jump the queue
         if priority == TIER_INTERACTIVE:
             self._queue.appendleft(req)
         else:
             self._queue.append(req)
         self.metrics.counter("serve.requests").inc()
+        # the process-global arrival-load gauge the forest router reads
+        # (serve/router.live_queue_depth): inc on submit, dec on admit
+        METRICS.counter(QUEUE_DEPTH_METRIC).inc()
         return req.uid
 
     def _shed_timed_out(self) -> None:
@@ -180,6 +187,7 @@ class ServeEngine:
         # admission ends the queue wait — recorded whether or not the
         # request was shed on the way in
         self._queue_wait_h.record(time.perf_counter() - req.submitted_at)
+        METRICS.counter(QUEUE_DEPTH_METRIC).inc(-1)
         with TRACER.span("serve.prefill", uid=req.uid, slot=slot,
                          shed=req.shed):
             P = len(req.prompt)

@@ -23,9 +23,11 @@ import numpy as np
 
 from repro.core.postprocess import predict_proba
 from repro.core.train import TrainConfig, train_forest
+from repro.obs import METRICS
 
 __all__ = ["RouterConfig", "ForestRouter", "synth_router_trace",
-           "TIER_INTERACTIVE", "TIER_BATCH"]
+           "TIER_INTERACTIVE", "TIER_BATCH", "QUEUE_DEPTH_METRIC",
+           "live_queue_depth"]
 
 #: the router's latency tiers.  The serve engine admits TIER_INTERACTIVE
 #: requests at the queue front and — the reliability contract — SHEDS an
@@ -47,10 +49,31 @@ class RouterConfig:
 FEATURES = ("prompt_len", "max_new_tokens", "queue_depth",
             "active_slots", "mean_prompt_len_recent")
 
+#: the live arrival-load instrument: every serving engine (LM
+#: ``ServeEngine`` and forest ``ForestServeEngine``) increments this
+#: process-global counter on submit and decrements on admission, so the
+#: router's ``queue_depth`` feature reflects ACTUAL instantaneous load
+#: rather than whatever a caller chose to report (docs/observability.md).
+QUEUE_DEPTH_METRIC = "serve.queue_depth"
+
+
+def live_queue_depth() -> float:
+    """Current process-wide queued-request count (never negative: the
+    counter is inc/dec'd from multiple engines and a reset mid-flight
+    could otherwise expose a transient negative to the forest)."""
+    return float(max(METRICS.counter(QUEUE_DEPTH_METRIC).value, 0))
+
 
 def request_features(prompt_len: int, max_new_tokens: int,
-                     queue_depth: int, active_slots: int,
-                     mean_recent: float) -> np.ndarray:
+                     queue_depth: float | None = None,
+                     active_slots: int = 0,
+                     mean_recent: float = 0.0) -> np.ndarray:
+    """Feature vector for one request.  ``queue_depth=None`` (the
+    default) reads the LIVE ``serve.queue_depth`` metric, so routing
+    decisions shift with actual load; passing a number keeps the old
+    caller-supplied behaviour (tests, offline traces)."""
+    if queue_depth is None:
+        queue_depth = live_queue_depth()
     return np.array([prompt_len, max_new_tokens, queue_depth,
                      active_slots, mean_recent], np.float32)
 
@@ -83,9 +106,11 @@ class ForestRouter:
         self.forest = forest
 
     def route(self, feats: np.ndarray) -> int:
-        """[F] or [N, F] features -> tier(s): ``TIER_INTERACTIVE`` (0)
-        or ``TIER_BATCH`` (1)."""
+        """[F] or [N, F] features -> tier(s): ``TIER_INTERACTIVE``
+        or ``TIER_BATCH`` (the named router constants — P(expensive)
+        above the threshold lands in the batch tier)."""
         x = jnp.asarray(np.atleast_2d(feats))
         p = predict_proba(self.forest, x, algorithm=self.cfg.algorithm)
-        tiers = (np.asarray(p) > self.cfg.threshold).astype(int)
+        tiers = np.where(np.asarray(p) > self.cfg.threshold,
+                         TIER_BATCH, TIER_INTERACTIVE).astype(int)
         return int(tiers[0]) if feats.ndim == 1 else tiers
