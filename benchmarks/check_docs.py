@@ -37,16 +37,21 @@ DOC = ROOT / "docs" / "benchmarks.md"
 OBS_DOC = ROOT / "docs" / "observability.md"
 
 SERVE_DOC = ROOT / "docs" / "serving.md"
+OPTIMIZER_DOC = ROOT / "docs" / "optimizer.md"
 
 #: bench files whose field contract lives in a doc other than
 #: docs/benchmarks.md
 DOC_OVERRIDES = {"BENCH_obs.json": OBS_DOC,
-                 "BENCH_serve.json": SERVE_DOC}
+                 "BENCH_serve.json": SERVE_DOC,
+                 "BENCH_optimizer.json": OPTIMIZER_DOC}
 
 #: serving-plane names (obs catalog entries prefixed ``serve.``, plus
 #: the row-level query span) must ALSO appear in docs/serving.md — the
 #: plane's own contract, on top of the observability-catalog check
 SERVE_NAME_PREFIXES = ("serve.", "query.infer_rows")
+
+#: cost-based-optimizer names must ALSO appear in docs/optimizer.md
+OPTIMIZER_NAME_PREFIXES = ("optimizer.",)
 
 
 def collect_keys(payload) -> set[str]:
@@ -156,10 +161,37 @@ def check_serve_names() -> bool:
     return False
 
 
+def check_optimizer_names() -> bool:
+    """Optimizer span/event/metric names must also be documented in
+    ``docs/optimizer.md`` — the decision plane's own contract doc."""
+    if not OPTIMIZER_DOC.exists():
+        print(f"FAIL: {OPTIMIZER_DOC.relative_to(ROOT)} does not exist")
+        return True
+    sys.path.insert(0, str(ROOT / "src"))
+    try:
+        from repro.obs import names as obs_names
+    finally:
+        sys.path.pop(0)
+    documented = _backticked(OPTIMIZER_DOC)
+    opt_names = sorted(
+        n for catalog in (obs_names.SPAN_NAMES, obs_names.EVENT_NAMES,
+                          obs_names.METRIC_NAMES)
+        for n in catalog if n.startswith(OPTIMIZER_NAME_PREFIXES))
+    missing = sorted(n for n in opt_names if n not in documented)
+    if missing:
+        print(f"FAIL optimizer names missing from "
+              f"{OPTIMIZER_DOC.relative_to(ROOT)}: {', '.join(missing)}")
+        return True
+    print(f"OK   optimizer names: all {len(opt_names)} documented "
+          f"({OPTIMIZER_DOC.relative_to(ROOT)})")
+    return False
+
+
 def main() -> int:
     failed = check_bench_files()
     failed = check_obs_names() or failed
     failed = check_serve_names() or failed
+    failed = check_optimizer_names() or failed
     return 1 if failed else 0
 
 

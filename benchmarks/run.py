@@ -174,6 +174,25 @@ def main() -> None:
             f"retrace={0 if r['zero_retrace'] else 1}"))
     print(f"# serve trajectory -> {serve_path}")
 
+    from benchmarks import bench_optimizer
+    print("\n## Cost-based optimizer: auto vs static regret grid")
+    opt_records = bench_optimizer.run_grid(
+        bench_optimizer.SMOKE_TREES if args.fast
+        else bench_optimizer.GRID_TREES,
+        bench_optimizer.SMOKE_ROWS if args.fast
+        else bench_optimizer.GRID_ROWS,
+        iters=2 if args.fast else 3)
+    bench_optimizer.print_records(opt_records)
+    bench_optimizer.check(opt_records, context="run.py optimizer")
+    opt_path = bench_optimizer.write_optimizer_json(opt_records)
+    for r in opt_records:
+        summary.append(C.csv_line(
+            f"optimizer/trees{r['trees']}/rows{r['rows']}", r["auto_s"],
+            f"auto={r['auto_algorithm']}+{r['auto_plan']} "
+            f"regret={r['regret_vs_best']}x "
+            f"win={r['win_vs_worst']}x"))
+    print(f"# optimizer trajectory -> {opt_path}")
+
     from benchmarks import bench_conversion
     print("\n## Fig8: model conversion + loading overheads")
     rows = bench_conversion.run(trees_grid=trees)

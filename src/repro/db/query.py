@@ -105,6 +105,7 @@ from repro.db.faults import (Deadline, DegradedReport, FaultInjector,
                              RetryPolicy)
 from repro.db.operators import (Operator, StageReport, ndevices,
                                 run_stages, split_into_stages)
+from repro.db.optimizer import CostBasedOptimizer, Decision
 from repro.db.store import TensorBlockStore
 from repro.dist.sharding import ForestShardingPlan, make_forest_plan
 from repro.obs import METRICS, TRACER, TraceSummary
@@ -149,6 +150,9 @@ class QueryResult:
     #                                   obs TRACER is enabled (else None);
     #                                   the full span tree is exportable
     #                                   via TRACER.export_chrome()
+    decision: Decision | None = None  # the optimizer verdict this query
+    #                                   executed under (plan="auto" /
+    #                                   algorithm="auto" only, else None)
 
     def breakdown(self) -> dict[str, float]:
         return {
@@ -239,6 +243,9 @@ class ForestQueryEngine:
         self._fingerprints: dict[int, str] = {}
         # store.drop sweeps this engine's dataset-dependent plan entries
         store.register_invalidator(self.invalidate_dataset)
+        # the cost-based optimizer behind plan="auto"/algorithm="auto"
+        # (db/optimizer.py); replaceable — tests install tighter budgets
+        self.optimizer = CostBasedOptimizer(self)
 
     # ------------------------------------------------------------------
     # cache-key components
@@ -270,15 +277,23 @@ class ForestQueryEngine:
         """
         n = self.cache.invalidate(model_id)
         n += self.plan_cache.invalidate(model_id, key_index=1)
+        # persisted optimizer decisions are keyed on the fingerprint at
+        # key[0] — a model update must re-decide, not serve stale picks
+        n += self.store.drop_decisions(model_id=model_id)
         return n
 
     def invalidate_dataset(self, dataset: str) -> int:
         """``TensorBlockStore.drop``'s hook: sweep compiled plans built
         against ``dataset`` (plan keys carry the dataset name at
-        ``key[2]``).  Model materializations are dataset-independent and
-        survive — only the plan executables, whose batch signatures came
-        from the dropped dataset, are stale.  Returns entries dropped."""
-        return self.plan_cache.invalidate(dataset, key_index=2)
+        ``key[2]``) AND any persisted optimizer decisions keyed on it
+        (``store.drop`` sweeps those itself first; this keeps direct
+        calls equivalent).  Model materializations are
+        dataset-independent and survive — only the plan executables,
+        whose batch signatures came from the dropped dataset, are
+        stale.  Returns entries dropped."""
+        n = self.plan_cache.invalidate(dataset, key_index=2)
+        n += self.store.drop_decisions(dataset=dataset)
+        return n
 
     # ------------------------------------------------------------------
     # sparse prepass (the wide-sparse data plane's plan-build half)
@@ -606,7 +621,21 @@ class ForestQueryEngine:
 
         On a data mesh ``B`` must divide the ``data`` axis; the batch is
         placed under the store's ``data_sharding`` like any scan batch.
+
+        ``plan="auto"`` / ``algorithm="auto"`` resolve through the
+        optimizer's row-batch decision (``decide_rows``, persisted per
+        (model, batch signature, mesh) — the serve plane resolves this
+        once at ``register_model`` instead of per call).
         """
+        if plan == "auto" or algorithm == "auto":
+            dec = self.optimizer.decide_rows(
+                forest, int(getattr(x, "shape", (len(x),))[0]),
+                model_id=model_id,
+                algorithms=None if algorithm == "auto" else (algorithm,),
+                plans=None if plan == "auto" else (plan,))
+            algorithm, plan = dec.algorithm, dec.plan
+            if n_parts is None:
+                n_parts = dec.n_parts
         if plan not in ("udf", "rel+reuse"):
             raise ValueError(
                 f"infer_rows serves cached plans only (udf / rel+reuse), "
@@ -705,8 +734,20 @@ class ForestQueryEngine:
         deadline_s: float | None = None,
         injector: FaultInjector | None = None,
         retry_policy: RetryPolicy | None = None,
+        auto_move: bool = False,
     ) -> QueryResult:
         """Run the end-to-end inference query (paper's measured pipeline).
+
+        ``plan="auto"`` / ``algorithm="auto"`` route through the
+        cost-based optimizer (``db/optimizer.py``): the first query per
+        (model fingerprint, dataset signature, mesh) pays a bounded
+        score + measure pass, every later query resolves the persisted
+        decision with a dictionary lookup.  Either axis can be pinned
+        while the other stays auto; explicit ``n_parts`` /
+        ``batch_pages`` always win over the decision's.  ``auto_move``
+        additionally applies the decision's TIER recommendation
+        (``store.move`` promotion before the scan — off by default: a
+        query should not silently migrate a dataset).
 
         ``n_parts`` overrides the rel plans' tree-partition count on the
         MESH-LESS path (default: one partition per kernel tree block); a
@@ -723,6 +764,27 @@ class ForestQueryEngine:
         rows scored / missing and the exact ``row_mask`` (scored rows
         are bit-identical to an unbounded run; missing rows are NaN).
         """
+        decision: Decision | None = None
+        if plan == "auto" or algorithm == "auto":
+            decision = self.optimizer.decide(
+                dataset, forest, model_id=model_id,
+                algorithms=None if algorithm == "auto" else (algorithm,),
+                plans=None if plan == "auto" else (plan,))
+            if auto_move and decision.tier != \
+                    getattr(self.store.get(dataset), "tier", "device"):
+                self.store.move(dataset, decision.tier)
+                # the move changed the dataset signature; re-decide once
+                # under the new tier (persisted, so still one-shot)
+                decision = self.optimizer.decide(
+                    dataset, forest, model_id=model_id,
+                    algorithms=None if algorithm == "auto"
+                    else (algorithm,),
+                    plans=None if plan == "auto" else (plan,))
+            algorithm, plan = decision.algorithm, decision.plan
+            if n_parts is None:
+                n_parts = decision.n_parts
+            if batch_pages is None:
+                batch_pages = decision.batch_pages
         if plan not in ("udf", "rel", "rel+reuse"):
             raise ValueError(f"unknown plan {plan!r}")
         ds = self.store.get(dataset)
@@ -935,4 +997,5 @@ class ForestQueryEngine:
             tier=tier,
             scan=scan,
             degraded=degraded,
+            decision=decision,
         )

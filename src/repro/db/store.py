@@ -285,6 +285,12 @@ class TensorBlockStore:
         # plans built against it (weakrefs — a dead engine unregisters
         # itself by getting collected)
         self._invalidators: list[weakref.ref] = []
+        # decision catalog (db/optimizer.py): persisted optimizer
+        # verdicts keyed (model fingerprint, dataset name, dataset
+        # signature, mesh signature).  Swept on the same events that
+        # sweep compiled plans: drop / re-put of the dataset here,
+        # ``ForestQueryEngine.invalidate(model_id)`` by fingerprint.
+        self._decisions: dict[tuple, Any] = {}
 
     # -- disk-tier spill files ----------------------------------------------
     @property
@@ -410,6 +416,7 @@ class TensorBlockStore:
         np_dtype = np.dtype(dtype)
         tier = self._resolve_tier(tier, arr.size * np_dtype.itemsize)
         self._release_disk(name)          # re-put: old spill files go away
+        self.drop_decisions(dataset=name)  # re-put: old decisions are stale
         if tier == "host":
             stored = np.ascontiguousarray(arr, np_dtype)
         elif tier == "disk":
@@ -473,6 +480,7 @@ class TensorBlockStore:
         page_rows = page_rows or self.default_page_rows
         pages_multiple = self.data_axis_size
         self._release_disk(name)          # re-put: old spill files go away
+        self.drop_decisions(dataset=name)  # re-put: old decisions are stale
 
         if pages is not None:
             # already-paginated pages: never round-trip through the host
@@ -680,13 +688,18 @@ class TensorBlockStore:
         """Drop a dataset AND invalidate dependent engine cache entries
         (compiled plans close over batch signatures derived from the
         dataset — leaving them resident after a drop pins device buffers
-        and serves entries for data that no longer exists).  Returns the
-        number of cache entries invalidated across registered engines.
-        Disk-tier spill files this store wrote are deleted."""
+        and serves entries for data that no longer exists).  Persisted
+        optimizer decisions keyed on the dataset are swept the same way.
+        Returns the number of cache entries (plans + decisions)
+        invalidated across registered engines.  Disk-tier spill files
+        this store wrote are deleted."""
         existed = self._datasets.pop(name, None)
         self._release_disk(name)
         invalidated = 0
         if existed is not None:
+            # persisted optimizer decisions keyed on this dataset go
+            # first (the engine hooks below then find nothing to re-drop)
+            invalidated += self.drop_decisions(dataset=name)
             for ref in list(self._invalidators):
                 fn = ref()
                 if fn is None:
@@ -694,6 +707,38 @@ class TensorBlockStore:
                 else:
                     invalidated += int(fn(name) or 0)
         return invalidated
+
+    # -- decision catalog (cost-based optimizer; db/optimizer.py) ------------
+    def put_decision(self, key: tuple, decision) -> None:
+        """Persist an optimizer decision.  Key layout is fixed by
+        ``db/optimizer.py``: ``key[0]`` is the model fingerprint,
+        ``key[1]`` the dataset name (or the ``#rows`` sentinel for
+        serving-plane row-batch decisions) — the two slots the sweeps
+        below match on."""
+        self._decisions[key] = decision
+
+    def get_decision(self, key: tuple):
+        """Steady-state lookup (None on miss) — the dictionary read that
+        replaces the score + autotune passes on repeat queries."""
+        return self._decisions.get(key)
+
+    def drop_decisions(self, *, model_id: str | None = None,
+                       dataset: str | None = None) -> int:
+        """Sweep persisted decisions by model fingerprint (``key[0]``)
+        and/or dataset name (``key[1]``); both None sweeps everything.
+        Returns entries dropped.  Mirrors the compiled-plan sweeps: a
+        decision must never outlive the model or dataset it ranked."""
+        doomed = [k for k in self._decisions
+                  if (model_id is None or k[0] == model_id)
+                  and (dataset is None or k[1] == dataset)]
+        for k in doomed:
+            del self._decisions[k]
+        return len(doomed)
+
+    def decision_catalog(self) -> dict[tuple, dict[str, Any]]:
+        """Catalog view of persisted decisions (dataclass → dict)."""
+        return {k: dataclasses.asdict(d)
+                for k, d in self._decisions.items()}
 
     # -- model catalog (serving-plane tenancy) -------------------------------
     def put_model(self, name: str, forest, **meta) -> dict[str, Any]:

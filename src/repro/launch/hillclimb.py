@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
-
 """§Perf hillclimb driver: lower a cell with config overrides and report
 the roofline-term deltas vs its baseline.
 
@@ -10,10 +5,15 @@ the roofline-term deltas vs its baseline.
         --arch llama4-scout-17b-a16e --shape decode_32k \
         --set moe_decode_ep=true --tag ep-psum-decode \
         --out experiments/hillclimb.jsonl
+
+The 512-way host-device override is applied inside :func:`main` (before
+jax is first imported via ``repro.launch.dryrun``) so that merely
+importing this module has no side effects on ``XLA_FLAGS``.
 """
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -44,6 +44,12 @@ def main() -> int:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+
+    # Must land before the first jax import (pulled in by dryrun below):
+    # the dryrun models a 512-chip mesh on host devices.
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
 
     from repro.launch.dryrun import run_cell
     overrides = dict(parse_override(kv) for kv in args.set)

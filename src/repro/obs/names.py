@@ -45,6 +45,9 @@ SPAN_NAMES = (
     "serve.execute",
     "serve.tick",
     "serve.coalesce",
+    # cost-based optimizer (db/optimizer.py)
+    "optimizer.decide",
+    "optimizer.autotune",
 )
 
 #: prefixes of dynamically named spans
@@ -61,6 +64,7 @@ EVENT_NAMES = (
     "deadline.hit",      # cooperative deadline stopped the scan
     "plan.cache",        # compiled-plan cache consulted (hit= attr)
     "serve.shed",        # admission timeout demoted a request to batch
+    "optimizer.decision",   # a decision was made + persisted (cell attrs)
 )
 
 #: every process-global METRICS counter (and the serve engine's
@@ -95,4 +99,10 @@ METRIC_NAMES = (
     "serve.padding_rows",
     "serve.plan_hits",
     "serve.plan_misses",
+    # cost-based optimizer (db/optimizer.py)
+    "optimizer.decisions",
+    "optimizer.decision_cache_hits",
+    "optimizer.decision_cache_misses",
+    "optimizer.autotune_runs",
+    "optimizer.measurements",
 )

@@ -196,9 +196,21 @@ class ForestServeEngine:
         ``warmup`` (default) — compiles one plan per bucket rung so the
         first real tick already hits the cache (the benchmarks' zero-
         retrace-after-warmup assertion starts here).  Replacing a name
-        sweeps the old model's compiled plans first."""
+        sweeps the old model's compiled plans first.
+
+        ``algorithm="auto"`` / ``plan="auto"`` resolve HERE, once per
+        tenant, through the cost-based optimizer's row-batch decision
+        (``db/optimizer.py``) at the largest bucket signature — the
+        per-request hot path then always runs a concrete, persisted
+        choice."""
         algorithm = algorithm or self.default_algorithm
         plan = plan or self.default_plan
+        if algorithm == "auto" or plan == "auto":
+            dec = self.qe.optimizer.decide_rows(
+                forest, max(self.buckets),
+                algorithms=None if algorithm == "auto" else (algorithm,),
+                plans=None if plan == "auto" else (plan,))
+            algorithm, plan = dec.algorithm, dec.plan
         old = self._models.get(name)
         if old is not None and old.pending:
             raise RuntimeError(
