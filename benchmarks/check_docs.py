@@ -38,12 +38,14 @@ OBS_DOC = ROOT / "docs" / "observability.md"
 
 SERVE_DOC = ROOT / "docs" / "serving.md"
 OPTIMIZER_DOC = ROOT / "docs" / "optimizer.md"
+TRAIN_DOC = ROOT / "docs" / "training.md"
 
 #: bench files whose field contract lives in a doc other than
 #: docs/benchmarks.md
 DOC_OVERRIDES = {"BENCH_obs.json": OBS_DOC,
                  "BENCH_serve.json": SERVE_DOC,
-                 "BENCH_optimizer.json": OPTIMIZER_DOC}
+                 "BENCH_optimizer.json": OPTIMIZER_DOC,
+                 "BENCH_train.json": TRAIN_DOC}
 
 #: serving-plane names (obs catalog entries prefixed ``serve.``, plus
 #: the row-level query span) must ALSO appear in docs/serving.md — the
@@ -52,6 +54,9 @@ SERVE_NAME_PREFIXES = ("serve.", "query.infer_rows")
 
 #: cost-based-optimizer names must ALSO appear in docs/optimizer.md
 OPTIMIZER_NAME_PREFIXES = ("optimizer.",)
+
+#: streamed-training names must ALSO appear in docs/training.md
+TRAIN_NAME_PREFIXES = ("train.",)
 
 
 def collect_keys(payload) -> set[str]:
@@ -187,11 +192,38 @@ def check_optimizer_names() -> bool:
     return False
 
 
+def check_train_names() -> bool:
+    """Streamed-training span/metric names must also be documented in
+    ``docs/training.md`` — the training plane's own contract doc."""
+    if not TRAIN_DOC.exists():
+        print(f"FAIL: {TRAIN_DOC.relative_to(ROOT)} does not exist")
+        return True
+    sys.path.insert(0, str(ROOT / "src"))
+    try:
+        from repro.obs import names as obs_names
+    finally:
+        sys.path.pop(0)
+    documented = _backticked(TRAIN_DOC)
+    train_names = sorted(
+        n for catalog in (obs_names.SPAN_NAMES, obs_names.EVENT_NAMES,
+                          obs_names.METRIC_NAMES)
+        for n in catalog if n.startswith(TRAIN_NAME_PREFIXES))
+    missing = sorted(n for n in train_names if n not in documented)
+    if missing:
+        print(f"FAIL training names missing from "
+              f"{TRAIN_DOC.relative_to(ROOT)}: {', '.join(missing)}")
+        return True
+    print(f"OK   training names: all {len(train_names)} documented "
+          f"({TRAIN_DOC.relative_to(ROOT)})")
+    return False
+
+
 def main() -> int:
     failed = check_bench_files()
     failed = check_obs_names() or failed
     failed = check_serve_names() or failed
     failed = check_optimizer_names() or failed
+    failed = check_train_names() or failed
     return 1 if failed else 0
 
 

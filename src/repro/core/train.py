@@ -23,11 +23,27 @@ LightGBM/XGBoost 'hist' strategy); NaNs occupy a dedicated MISSING slot and
 the split search learns the default direction per node (XGBoost's sparsity-
 aware split), which is what the paper's Bosch/Criteo workloads exercise.
 
-Everything after binning is jit-compiled JAX: per-level histograms are
-``segment_sum`` scatters, split search is a cumsum + argmax over
-[nodes, features, bins, directions], and routing is integer compares on the
-binned matrix.  The grower emits the dense complete-tree layout of
-``core.forest`` directly (terminal nodes become pass-through, threshold=+inf).
+The grower is factored so the SAME per-level math runs whether the binned
+matrix is resident or streamed page-batch-by-page-batch from the tiered
+store (``db/train.py``):
+
+  * routing is a jit-compiled integer kernel over binned rows — exact, so
+    per-batch and whole-array execution agree bitwise;
+  * gradient/hessian histograms are accumulated HOST-side into float64 via
+    ``np.add.at`` in global row order.  ``np.add.at`` is unbuffered and
+    applies updates sequentially in element order, so accumulating
+    consecutive row slices in order performs the exact same float-add
+    sequence as one whole-array call — histograms are bit-identical for
+    ANY batching of the rows (float addition is not associative; a
+    partial-sums-per-batch scheme would not have this property);
+  * split search / leaf values / gradients / sampling weights are single
+    shared functions of those histograms and relations.
+
+Consequently ``train_forest`` (resident) and the streamed trainer produce
+bit-identical forests given identical bin edges, regardless of page or
+batch geometry — the contract ``tests/test_train_streaming.py`` enforces.
+The grower emits the dense complete-tree layout of ``core.forest`` directly
+(terminal nodes become pass-through, threshold=+inf).
 """
 
 from __future__ import annotations
@@ -44,8 +60,11 @@ from repro.core.forest import Forest, make_forest, num_internal, num_leaves
 __all__ = [
     "TrainConfig",
     "quantile_bin_edges",
+    "edges_from_sample",
     "bin_features",
     "train_forest",
+    "grow_forest_scanned",
+    "route_level",
 ]
 
 
@@ -71,6 +90,20 @@ class TrainConfig:
 # ---------------------------------------------------------------------------
 
 
+def _column_edges(col: np.ndarray, num_bins: int) -> np.ndarray:
+    """Interior edges [num_bins - 1] for one feature column (NaNs removed).
+
+    Strictly increasing; duplicate quantiles collapse to +inf (empty bins).
+    Shared by the exact resident pass and the streamed sketch finalizer.
+    """
+    qs = np.linspace(0.0, 1.0, num_bins + 1)[1:-1]
+    if col.size == 0:
+        return np.full((num_bins - 1,), np.inf, np.float32)
+    e = np.quantile(col, qs).astype(np.float32)
+    e = np.where(np.diff(np.concatenate([[-np.inf], e])) > 0, e, np.inf)
+    return np.sort(e)
+
+
 def quantile_bin_edges(x: np.ndarray, num_bins: int) -> np.ndarray:
     """Per-feature interior bin boundaries [F, num_bins - 1].
 
@@ -78,19 +111,20 @@ def quantile_bin_edges(x: np.ndarray, num_bins: int) -> np.ndarray:
     Constant features get +inf edges (every sample in bin 0, unsplittable).
     """
     F = x.shape[1]
-    qs = np.linspace(0.0, 1.0, num_bins + 1)[1:-1]
     edges = np.empty((F, num_bins - 1), np.float32)
     for f in range(F):
         col = x[:, f]
-        col = col[~np.isnan(col)]
-        if col.size == 0:
-            edges[f] = np.inf
-            continue
-        e = np.quantile(col, qs).astype(np.float32)
-        # strictly increasing edges; collapse duplicates to +inf (empty bins)
-        e = np.where(np.diff(np.concatenate([[-np.inf], e])) > 0, e, np.inf)
-        edges[f] = np.sort(e)
+        edges[f] = _column_edges(col[~np.isnan(col)], num_bins)
     return edges
+
+
+def edges_from_sample(sample: np.ndarray, num_bins: int) -> np.ndarray:
+    """Edges from a [S, F] row sample (the streamed sketch finalizer).
+
+    Same per-column quantile + dedupe logic as :func:`quantile_bin_edges`,
+    applied to whatever rows the sketch retained instead of the full matrix.
+    """
+    return quantile_bin_edges(np.asarray(sample, np.float32), num_bins)
 
 
 def bin_features(x: np.ndarray | jax.Array, edges: np.ndarray) -> jax.Array:
@@ -105,177 +139,212 @@ def bin_features(x: np.ndarray | jax.Array, edges: np.ndarray) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# One depth-wise level: histogram -> split search -> routing
+# Shared per-level machinery: route kernel, histogram update, split search
 # ---------------------------------------------------------------------------
 
 
-def _level_step(level: int, num_bins: int, reg_lambda: float,
-                min_child_weight: float, min_split_gain: float):
-    """Returns a function processing level ``level`` (2^level nodes)."""
+@partial(jax.jit, static_argnames=("level", "num_bins"))
+def route_level(bins, node_of, feat, sbin, dleft, term, *, level, num_bins):
+    """Route rows through level ``level``'s recorded splits (exact ints).
+
+    bins [rows, F] int32; node_of [rows] dense positions at level ``level``;
+    feat/sbin/dleft/term [2^level] that level's split params.  Terminal
+    nodes pass every row left (the growth-time convention, so the whole
+    terminal chain lands in one leaf).  Integer/boolean only — per-batch
+    and whole-array execution are bitwise identical.
+    """
     n_nodes = 1 << level
-    first = (1 << level) - 1  # first dense position of this level
+    first = n_nodes - 1
+    local = jnp.clip(node_of - first, 0, n_nodes - 1)
+    my_bin = jnp.take_along_axis(bins, feat[local][:, None], axis=1)[:, 0]
+    is_missing = my_bin == num_bins
+    go_left = jnp.where(is_missing, dleft[local], my_bin <= sbin[local])
+    go_left = go_left | term[local]
+    return 2 * node_of + 1 + (1 - go_left.astype(jnp.int32))
 
-    def step(bins, g, h, node_of, feat_mask):
-        """bins [N,F] int32; g,h [N]; node_of [N] dense positions;
-        feat_mask [F] bool (allowed features).
-        Returns (feature, split_bin, default_left, gain) each [n_nodes]
-        and the updated node_of."""
-        N, F = bins.shape
-        B = num_bins
-        local = node_of - first  # [N] in [0, n_nodes); stale samples clamped
-        local = jnp.clip(local, 0, n_nodes - 1)
 
-        # --- histograms: segment ids (local, f, bin) ----------------------
-        f_ix = jnp.arange(F, dtype=jnp.int32)[None, :]
-        seg = (local[:, None] * F + f_ix) * (B + 1) + bins  # [N, F]
-        segs = seg.reshape(-1)
-        nseg = n_nodes * F * (B + 1)
-        hg = jax.ops.segment_sum(jnp.broadcast_to(g[:, None], (N, F)).reshape(-1),
-                                 segs, nseg).reshape(n_nodes, F, B + 1)
-        hh = jax.ops.segment_sum(jnp.broadcast_to(h[:, None], (N, F)).reshape(-1),
-                                 segs, nseg).reshape(n_nodes, F, B + 1)
+def hist_update(hg: np.ndarray, hh: np.ndarray, bins: np.ndarray,
+                node_of: np.ndarray, g: np.ndarray, h: np.ndarray) -> None:
+    """Accumulate one row slice into the level's float64 histograms.
 
-        g_miss, h_miss = hg[..., B], hh[..., B]            # [n, F]
-        cg = jnp.cumsum(hg[..., :B], axis=-1)              # [n, F, B]
-        ch = jnp.cumsum(hh[..., :B], axis=-1)
-        g_tot = cg[..., -1] + g_miss                       # [n, F]
-        h_tot = ch[..., -1] + h_miss
+    hg/hh [n_nodes, F, num_bins + 1] float64 (in place); bins [rows, F]
+    integer; node_of [rows] dense positions; g/h [rows] float32.
 
-        lam = jnp.float32(reg_lambda)
+    Canonical accumulation order: ``np.add.at`` applies its updates
+    sequentially in element order (row-major here), so calling this on
+    consecutive row slices in order is bit-identical to one whole-array
+    call — the property the streamed trainer's parity contract rests on.
+    Rows with g == h == 0 (store padding) add +0.0 everywhere, which never
+    changes an accumulator bit (accumulators can never hold -0.0).
+    """
+    n_nodes, F, bp1 = hg.shape
+    first = n_nodes - 1
+    local = np.clip(node_of.astype(np.int64) - first, 0, n_nodes - 1)
+    f_ix = np.arange(F, dtype=np.int64)[None, :]
+    seg = ((local[:, None] * F + f_ix) * bp1 + bins.astype(np.int64)).reshape(-1)
+    np.add.at(hg.reshape(-1), seg, np.repeat(g.astype(np.float64), F))
+    np.add.at(hh.reshape(-1), seg, np.repeat(h.astype(np.float64), F))
 
-        def score(G, H):
-            return jnp.square(G) / (H + lam)
 
-        # split at s (left = bins <= s), s in [0, B-2]; two missing dirs.
-        s_cg, s_ch = cg[..., : B - 1], ch[..., : B - 1]    # [n, F, B-1]
+def _segment_sum64(values: np.ndarray, seg: np.ndarray, n: int) -> np.ndarray:
+    """Float64 sequential-order segment sum (np.add.at; see hist_update)."""
+    acc = np.zeros((n,), np.float64)
+    np.add.at(acc, seg.astype(np.int64), values.astype(np.float64))
+    return acc
+
+
+def _split_from_hist(hg64: np.ndarray, hh64: np.ndarray, feat_mask: np.ndarray,
+                     *, num_bins: int, reg_lambda: float,
+                     min_child_weight: float, min_split_gain: float):
+    """Depth-wise split search over one level's histograms (host side).
+
+    hg64/hh64 [n_nodes, F, B+1] float64 accumulators (cast f32 once, the
+    same cast in both paths); feat_mask [F] bool.  Returns per-node
+    (feature, split_bin, default_left, terminal, node_g, node_h) with the
+    growth conventions: terminal nodes record feature 0 and pass through.
+    """
+    hg = hg64.astype(np.float32)
+    hh = hh64.astype(np.float32)
+    n_nodes, F, _ = hg.shape
+    B = num_bins
+    g_miss, h_miss = hg[..., B], hh[..., B]                # [n, F]
+    cg = np.cumsum(hg[..., :B], axis=-1)                   # [n, F, B]
+    ch = np.cumsum(hh[..., :B], axis=-1)
+    g_tot = cg[..., -1] + g_miss
+    h_tot = ch[..., -1] + h_miss
+
+    lam = np.float32(reg_lambda)
+
+    def score(G, H):
+        return np.square(G) / (H + lam)
+
+    # split at s (left = bins <= s), s in [0, B-2]; two missing dirs.
+    s_cg, s_ch = cg[..., : B - 1], ch[..., : B - 1]        # [n, F, B-1]
+    with np.errstate(divide="ignore", invalid="ignore"):
         parent = score(g_tot, h_tot)[..., None]            # [n, F, 1]
         gains = []
-        for mdir in (0, 1):  # 0: missing right, 1: missing left (default_left)
+        for mdir in (0, 1):  # 0: missing right, 1: missing left
             GL = s_cg + (g_miss[..., None] if mdir else 0.0)
             HL = s_ch + (h_miss[..., None] if mdir else 0.0)
             GR = g_tot[..., None] - GL
             HR = h_tot[..., None] - HL
             gain = score(GL, HL) + score(GR, HR) - parent
             ok = (HL >= min_child_weight) & (HR >= min_child_weight)
-            gains.append(jnp.where(ok, gain, -jnp.inf))
-        gain_all = jnp.stack(gains, axis=-1)               # [n, F, B-1, 2]
-        gain_all = jnp.where(feat_mask[None, :, None, None], gain_all, -jnp.inf)
+            gains.append(np.where(ok, gain, -np.inf))
+    gain_all = np.stack(gains, axis=-1)                    # [n, F, B-1, 2]
+    gain_all = np.where(feat_mask[None, :, None, None], gain_all, -np.inf)
 
-        flat = gain_all.reshape(n_nodes, -1)
-        best = jnp.argmax(flat, axis=-1)                   # [n]
-        best_gain = jnp.take_along_axis(flat, best[:, None], axis=-1)[:, 0]
-        n_dirs = 2
-        n_splits = (B - 1) * n_dirs
-        feat = (best // n_splits).astype(jnp.int32)
-        rem = best % n_splits
-        split_bin = (rem // n_dirs).astype(jnp.int32)
-        default_left = (rem % n_dirs) == 1
+    flat = gain_all.reshape(n_nodes, -1)
+    best = np.argmax(flat, axis=-1)                        # [n]
+    best_gain = np.take_along_axis(flat, best[:, None], axis=-1)[:, 0]
+    n_dirs = 2
+    n_splits = (B - 1) * n_dirs
+    feat = (best // n_splits).astype(np.int32)
+    rem = best % n_splits
+    split_bin = (rem // n_dirs).astype(np.int32)
+    default_left = (rem % n_dirs) == 1
 
+    with np.errstate(invalid="ignore"):
         terminal = ~(best_gain > min_split_gain)           # includes -inf/NaN
-        # terminal nodes: pass-through (everything left).
-        feat = jnp.where(terminal, 0, feat)
+    feat = np.where(terminal, np.int32(0), feat)
 
-        # node value (for premature-leaf bookkeeping): -G/(H+lam) flavor is
-        # applied by the caller; here record raw G, H per node.
-        node_g = jax.ops.segment_sum(g, local, n_nodes)
-        node_h = jax.ops.segment_sum(h, local, n_nodes)
-
-        # --- route ---------------------------------------------------------
-        my_bin = jnp.take_along_axis(bins, feat[local][:, None], axis=1)[:, 0]
-        my_split = split_bin[local]
-        my_dl = default_left[local]
-        is_missing = my_bin == B
-        go_left = jnp.where(is_missing, my_dl, my_bin <= my_split)
-        go_left = go_left | terminal[local]
-        pos = node_of
-        new_pos = 2 * pos + 1 + (1 - go_left.astype(jnp.int32))
-        return (feat, split_bin, default_left, terminal, node_g, node_h,
-                new_pos)
-
-    return step
+    # Node stats from the histograms themselves: every feature column
+    # partitions all of a node's rows, so feature 0 summed over bins IS the
+    # node total (float64, deterministic np.sum — identical in both paths).
+    node_g = hg64[:, 0, :].sum(axis=-1).astype(np.float32)
+    node_h = hh64[:, 0, :].sum(axis=-1).astype(np.float32)
+    return feat, split_bin, default_left, terminal, node_g, node_h
 
 
-@partial(jax.jit, static_argnames=("max_depth", "num_bins", "reg_lambda",
-                                   "min_child_weight", "min_split_gain"))
-def _grow_tree(bins, g, h, feat_mask, *, max_depth, num_bins, reg_lambda,
-               min_child_weight, min_split_gain):
-    """Grow one dense depth-``max_depth`` tree. Returns dense arrays."""
-    N, F = bins.shape
-    I, L = num_internal(max_depth), num_leaves(max_depth)
-    feature = jnp.zeros((I,), jnp.int32)
-    split_bin = jnp.zeros((I,), jnp.int32)
-    default_left = jnp.ones((I,), bool)
-    terminal = jnp.zeros((I,), bool)
-    node_g = jnp.zeros((I,), jnp.float32)
-    node_h = jnp.zeros((I,), jnp.float32)
-
-    node_of = jnp.zeros((N,), jnp.int32)
-    for level in range(max_depth):
-        step = _level_step(level, num_bins, reg_lambda, min_child_weight,
-                           min_split_gain)
-        f_, s_, dl_, t_, ng_, nh_, node_of = step(bins, g, h, node_of, feat_mask)
-        first = (1 << level) - 1
-        sl = slice(first, first + (1 << level))
-        feature = feature.at[sl].set(f_)
-        split_bin = split_bin.at[sl].set(s_)
-        default_left = default_left.at[sl].set(dl_)
-        terminal = terminal.at[sl].set(t_)
-        node_g = node_g.at[sl].set(ng_)
-        node_h = node_h.at[sl].set(nh_)
-
-    # leaf stats
-    leaf_local = jnp.clip(node_of - I, 0, L - 1)
-    leaf_g = jax.ops.segment_sum(g, leaf_local, L)
-    leaf_h = jax.ops.segment_sum(h, leaf_local, L)
-    return feature, split_bin, default_left, terminal, node_g, node_h, leaf_g, leaf_h
-
-
-def _leaf_value(G, H, *, model_type, learning_rate, reg_lambda):
+def _leaf_value_np(G: np.ndarray, H: np.ndarray, *, model_type: str,
+                   learning_rate: float, reg_lambda: float) -> np.ndarray:
     if model_type == "randomforest":
-        return jnp.where(H > 0, G / jnp.maximum(H, 1e-12), 0.0)
-    return -learning_rate * G / (H + reg_lambda)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            return np.where(H > 0, G / np.maximum(H, np.float32(1e-12)),
+                            np.float32(0.0)).astype(np.float32)
+    return (np.float32(-learning_rate) * G
+            / (H + np.float32(reg_lambda))).astype(np.float32)
 
 
-@partial(jax.jit, static_argnames=("num_bins",))
-def _route_margin(bins, feature, split_bin, default_left, leaf_value, depth_arr,
-                  *, num_bins):
-    """Margin contribution of one dense tree on binned features (exact)."""
-    N = bins.shape[0]
-    I = feature.shape[0]
-    depth = depth_arr  # python int via closure; kept for clarity
-    pos = jnp.zeros((N,), jnp.int32)
-    d = 0
-    while (1 << d) - 1 < I:
-        f = feature[pos]
-        b = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
-        missing = b == num_bins
-        left = jnp.where(missing, default_left[pos], b <= split_bin[pos])
-        pos = 2 * pos + 1 + (1 - left.astype(jnp.int32))
-        d += 1
-    return leaf_value[pos - I]
+def _tree_gradients(margin: np.ndarray, yj: jax.Array, cfg: TrainConfig,
+                    tree_index: int, k_bag, k_goss):
+    """Per-tree (g, h) over the REAL rows, as host float32 arrays.
+
+    One implementation for both the resident and streamed paths: sigmoid,
+    Poisson bagging, the GOSS quantile threshold and uniform draws all run
+    in jax from the same key, so both paths see bit-identical gradients.
+    """
+    N = margin.shape[0]
+    if cfg.model_type == "randomforest":
+        w = jax.random.poisson(k_bag, 1.0, (N,)).astype(jnp.float32)
+        g, h = yj * w, w
+    else:
+        m = jnp.asarray(margin)
+        if cfg.task == "classification":
+            p = jax.nn.sigmoid(m)
+            g, h = p - yj, p * (1.0 - p)
+        else:
+            g, h = m - yj, jnp.ones((N,), jnp.float32)
+        if cfg.model_type == "lightgbm" and tree_index > 0:
+            # first tree sees all data (LightGBM GOSS convention)
+            a, b = cfg.goss_top, cfg.goss_rest
+            ag = jnp.abs(g)
+            thr = jnp.quantile(ag, 1.0 - a)
+            top = ag >= thr
+            rest = (~top) & (jax.random.uniform(k_goss, (N,)) < b)
+            w = top.astype(jnp.float32) + rest.astype(jnp.float32) * ((1 - a) / b)
+            g, h = g * w, h * w
+    return np.asarray(g), np.asarray(h)
+
+
+def _tree_feature_mask(k_feat, F: int, cfg: TrainConfig) -> np.ndarray:
+    if cfg.model_type == "randomforest" and cfg.colsample < 1.0:
+        k_sel = max(1, int(round(cfg.colsample * F)))
+        perm = jax.random.permutation(k_feat, F)[:k_sel]
+        return np.asarray(jnp.zeros((F,), bool).at[perm].set(True))
+    return np.ones((F,), bool)
 
 
 # ---------------------------------------------------------------------------
-# Driver
+# The grower: drives run_scan over the binned relation, level by level
 # ---------------------------------------------------------------------------
 
 
-def train_forest(x: np.ndarray, y: np.ndarray, cfg: TrainConfig) -> Forest:
-    """Train a decision forest on [N, F] features / [N] targets."""
+def grow_forest_scanned(run_scan, *, y: np.ndarray, num_rows: int,
+                        num_features: int, total_rows: int | None = None,
+                        edges: np.ndarray, cfg: TrainConfig) -> Forest:
+    """Grow a forest by scanning the binned relation once per level.
+
+    ``run_scan(node_of, route=None, hist=None)`` is the scan provider:
+    it must visit every row of the binned relation in global row order,
+    (a) if ``route`` is ``(level, feat, sbin, dleft, term)``, route each
+    row with :func:`route_level` (returning the updated node_of), then
+    (b) if ``hist`` is ``(g, h, level)``, accumulate that level's
+    histograms via :func:`hist_update`, returning ``(hg64, hh64)``.
+    The resident provider does both on the whole array; the streamed
+    provider (``db/train.py``) does both per executor batch — bitwise the
+    same result by the canonical-accumulation argument in the module doc.
+
+    ``total_rows`` is the relation length including any page padding
+    (padded rows carry g = h = 0 and contribute nothing); ``num_rows`` is
+    the real row count that gradients and margins are computed over.
+    """
     if cfg.model_type not in ("randomforest", "xgboost", "lightgbm"):
         raise ValueError(f"unknown model_type {cfg.model_type!r}")
-    x = np.asarray(x, np.float32)
+    N = int(num_rows)
+    F = int(num_features)
+    total = N if total_rows is None else int(total_rows)
+    if total < N:
+        raise ValueError(f"total_rows {total} < num_rows {N}")
+    edges = np.asarray(edges, np.float32)
     y_np = np.asarray(y, np.float32)
-    N, F = x.shape
-    edges = quantile_bin_edges(x, cfg.num_bins)
-    bins = bin_features(x, edges)
     yj = jnp.asarray(y_np)
     I, L = num_internal(cfg.max_depth), num_leaves(cfg.max_depth)
 
     key = jax.random.PRNGKey(cfg.seed)
     is_rf = cfg.model_type == "randomforest"
-    is_goss = cfg.model_type == "lightgbm"
     reg_lambda = 0.0 if is_rf else cfg.reg_lambda
+    lr = 1.0 if is_rf else cfg.learning_rate
 
     feature_T = np.zeros((cfg.num_trees, I), np.int32)
     threshold_T = np.full((cfg.num_trees, I), np.inf, np.float32)
@@ -284,70 +353,53 @@ def train_forest(x: np.ndarray, y: np.ndarray, cfg: TrainConfig) -> Forest:
     node_value_T = np.zeros((cfg.num_trees, I), np.float32)
     leaf_value_T = np.zeros((cfg.num_trees, L), np.float32)
 
-    edges_j = jnp.asarray(edges)
-    margin = jnp.zeros((N,), jnp.float32)
+    margin = np.zeros((N,), np.float32)
 
     for t in range(cfg.num_trees):
         key, k_bag, k_feat, k_goss = jax.random.split(key, 4)
-        # --- per-family gradients -------------------------------------
-        if is_rf:
-            w = jax.random.poisson(k_bag, 1.0, (N,)).astype(jnp.float32)
-            g, h = yj * w, w
-        else:
-            if cfg.task == "classification":
-                p = jax.nn.sigmoid(margin)
-                g, h = p - yj, p * (1.0 - p)
-            else:
-                g, h = margin - yj, jnp.ones((N,), jnp.float32)
-            if is_goss and t > 0:  # first tree sees all data (LightGBM)
-                a, b = cfg.goss_top, cfg.goss_rest
-                ag = jnp.abs(g)
-                thr = jnp.quantile(ag, 1.0 - a)
-                top = ag >= thr
-                rest = (~top) & (jax.random.uniform(k_goss, (N,)) < b)
-                w = top.astype(jnp.float32) + rest.astype(jnp.float32) * ((1 - a) / b)
-                g, h = g * w, h * w
-        # --- feature subsampling (RF) ----------------------------------
-        if is_rf and cfg.colsample < 1.0:
-            k_sel = max(1, int(round(cfg.colsample * F)))
-            perm = jax.random.permutation(k_feat, F)[:k_sel]
-            feat_mask = jnp.zeros((F,), bool).at[perm].set(True)
-        else:
-            feat_mask = jnp.ones((F,), bool)
+        g, h = _tree_gradients(margin, yj, cfg, t, k_bag, k_goss)
+        if total > N:  # store page padding: inert rows
+            g = np.concatenate([g, np.zeros((total - N,), np.float32)])
+            h = np.concatenate([h, np.zeros((total - N,), np.float32)])
+        feat_mask = _tree_feature_mask(k_feat, F, cfg)
 
-        out = _grow_tree(
-            bins, g, h, feat_mask,
-            max_depth=cfg.max_depth, num_bins=cfg.num_bins,
-            reg_lambda=reg_lambda, min_child_weight=cfg.min_child_weight,
-            min_split_gain=cfg.min_split_gain,
-        )
-        feat, sbin, dleft, term, ng, nh, lg, lh = out
-        lv = _leaf_value(lg, lh, model_type=cfg.model_type,
-                         learning_rate=(1.0 if is_rf else cfg.learning_rate),
-                         reg_lambda=reg_lambda)
-        nv = _leaf_value(ng, nh, model_type=cfg.model_type,
-                         learning_rate=(1.0 if is_rf else cfg.learning_rate),
-                         reg_lambda=reg_lambda)
+        node_of = np.zeros((total,), np.int32)
+        route = None
+        for level in range(cfg.max_depth):
+            node_of, hists = run_scan(node_of, route=route,
+                                      hist=(g, h, level))
+            feat, sbin, dleft, term, ng, nh = _split_from_hist(
+                hists[0], hists[1], feat_mask,
+                num_bins=cfg.num_bins, reg_lambda=reg_lambda,
+                min_child_weight=cfg.min_child_weight,
+                min_split_gain=cfg.min_split_gain)
+            first = (1 << level) - 1
+            sl = slice(first, first + (1 << level))
+            feature_T[t, sl] = feat
+            # dense threshold in feature units: left iff bin <= s iff
+            # x < edges[f, s]; terminal -> pass-through (+inf, left)
+            thr = edges[feat, np.clip(sbin, 0, cfg.num_bins - 2)]
+            threshold_T[t, sl] = np.where(term, np.float32(np.inf), thr)
+            default_left_T[t, sl] = np.where(term, True, dleft)
+            node_is_leaf_T[t, sl] = term
+            node_value_T[t, sl] = _leaf_value_np(
+                ng, nh, model_type=cfg.model_type, learning_rate=lr,
+                reg_lambda=reg_lambda)
+            route = (level, feat, sbin, dleft, term)
 
-        # dense threshold in feature units: left iff bin <= s iff x < edges[f, s]
-        thr = edges_j[feat, jnp.clip(sbin, 0, cfg.num_bins - 2)]
-        thr = jnp.where(term, jnp.inf, thr)
-        dleft = jnp.where(term, True, dleft)
-
-        # terminal-node value propagation to unreachable dense leaves is not
-        # needed (pass-through sends every sample left; the reachable dense
-        # leaf under a terminal chain accumulates that node's samples).
-        feature_T[t] = np.asarray(feat)
-        threshold_T[t] = np.asarray(thr)
-        default_left_T[t] = np.asarray(dleft)
-        node_is_leaf_T[t] = np.asarray(term)
-        node_value_T[t] = np.asarray(nv)
-        leaf_value_T[t] = np.asarray(lv)
-
+        # final scan: route through the last level to leaf positions
+        node_of, _ = run_scan(node_of, route=route, hist=None)
+        leaf_local = np.clip(node_of - I, 0, L - 1)
+        leaf_g = _segment_sum64(g, leaf_local, L).astype(np.float32)
+        leaf_h = _segment_sum64(h, leaf_local, L).astype(np.float32)
+        lv = _leaf_value_np(leaf_g, leaf_h, model_type=cfg.model_type,
+                            learning_rate=lr, reg_lambda=reg_lambda)
+        leaf_value_T[t] = lv
         if not is_rf:
-            margin = margin + _route_margin(
-                bins, feat, sbin, dleft, jnp.asarray(leaf_value_T[t]),
-                cfg.max_depth, num_bins=cfg.num_bins)
+            # fit-consistent boosting: each row takes the value of the leaf
+            # it was fitted into (growth routing, terminal chains forced
+            # left) — the XGBoost/LightGBM update rule.
+            margin = margin + lv[leaf_local[:N]]
 
     return make_forest(
         feature_T, threshold_T, leaf_value_T,
@@ -359,3 +411,52 @@ def train_forest(x: np.ndarray, y: np.ndarray, cfg: TrainConfig) -> Forest:
         task=cfg.task,
         base_score=0.0,
     )
+
+
+# ---------------------------------------------------------------------------
+# Resident driver (whole binned matrix in memory — the reference path)
+# ---------------------------------------------------------------------------
+
+
+def _resident_scan(bins_np: np.ndarray, num_bins: int):
+    """Scan provider over a resident [N, F] int32 binned matrix."""
+    bins_j = jnp.asarray(bins_np)
+
+    def run_scan(node_of, *, route=None, hist=None):
+        if route is not None:
+            level, feat, sbin, dleft, term = route
+            node_of = np.asarray(route_level(
+                bins_j, jnp.asarray(node_of), jnp.asarray(feat),
+                jnp.asarray(sbin), jnp.asarray(dleft), jnp.asarray(term),
+                level=level, num_bins=num_bins))
+        hists = None
+        if hist is not None:
+            g, h, level = hist
+            n_nodes = 1 << level
+            F = bins_np.shape[1]
+            hg = np.zeros((n_nodes, F, num_bins + 1), np.float64)
+            hh = np.zeros((n_nodes, F, num_bins + 1), np.float64)
+            hist_update(hg, hh, bins_np, node_of, g, h)
+            hists = (hg, hh)
+        return node_of, hists
+
+    return run_scan
+
+
+def train_forest(x: np.ndarray, y: np.ndarray, cfg: TrainConfig,
+                 *, edges: np.ndarray | None = None) -> Forest:
+    """Train a decision forest on resident [N, F] features / [N] targets.
+
+    ``edges`` overrides the exact-quantile binning (the streamed trainer
+    passes its sketch edges here when asserting parity: the bit-identity
+    contract is conditioned on identical bin edges).
+    """
+    x = np.asarray(x, np.float32)
+    y_np = np.asarray(y, np.float32)
+    N, F = x.shape
+    if edges is None:
+        edges = quantile_bin_edges(x, cfg.num_bins)
+    bins_np = np.asarray(bin_features(x, edges))
+    return grow_forest_scanned(
+        _resident_scan(bins_np, cfg.num_bins),
+        y=y_np, num_rows=N, num_features=F, edges=edges, cfg=cfg)

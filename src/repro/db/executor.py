@@ -398,7 +398,7 @@ class StreamingScanExecutor:
     """
 
     def __init__(self, stages, *, sharding=None, prefetch_depth: int = 2,
-                 result_key: str = "pred",
+                 result_key: str | None = "pred",
                  injector: FaultInjector | None = None,
                  retry_policy: RetryPolicy | None = None,
                  deadline: Deadline | None = None,
@@ -461,8 +461,9 @@ class StreamingScanExecutor:
                 if self.retry_policy is not None else 1)
 
     # -- execution ----------------------------------------------------------
-    def execute(self, source: ScanSource, batch_pages: int
-                ) -> tuple[np.ndarray, list[StageReport], ScanStats]:
+    def execute(self, source: ScanSource, batch_pages: int, *,
+                extras=None, on_batch=None
+                ) -> tuple[np.ndarray | None, list[StageReport], ScanStats]:
         """Stream every page batch of ``source`` through the stages.
 
         Returns (predictions [num_rows] host f32, per-batch stage
@@ -471,6 +472,27 @@ class StreamingScanExecutor:
         With ``prefetch_depth=2`` the buffer is filled by a dedicated
         drain worker thread, so batch i−1's D2H never blocks batch i's
         kernel stages; depth 1 drains inline (the synchronous reference).
+
+        Two hooks open the loop to REDUCTION scans (the in-database
+        trainer, ``db/train.py``); both default off and cost nothing when
+        unused:
+
+          * ``extras(first_page, num_pages) -> dict`` — per-batch extra
+            stage inputs, merged into the initial stage state next to
+            ``"x"`` (the trainer feeds each batch's slice of the node-of
+            relation to the routing stage this way);
+          * ``on_batch(first_page, num_pages, state)`` — called on the
+            compute thread right after the stages, BEFORE the drain
+            submit, in plan order (the trainer accumulates its gradient
+            histograms here).  On an injector-free scan the plan is never
+            reordered or split, so the hook sees every batch exactly once
+            in global row order — order-sensitive reductions must run
+            with the reliability ladders off.
+
+        A scan whose only product flows through ``on_batch`` can pass
+        ``result_key=None`` to the constructor: the drain (worker thread,
+        result buffer, D2H) is skipped entirely and ``execute`` returns
+        ``None`` predictions.
 
         Failure semantics: transient faults at the injection sites are
         retried and degraded down the ladders (see the module
@@ -501,7 +523,9 @@ class StreamingScanExecutor:
 
         # the async drain rides with double-buffering; depth 1 keeps the
         # drain inline as the fully synchronous reference pipeline
-        async_drain = self.prefetch_depth >= 2 and n_planned > 1
+        # (drainless reduction scans skip the worker entirely)
+        async_drain = (self.prefetch_depth >= 2 and n_planned > 1
+                       and self.result_key is not None)
         # effective depth can DEGRADE mid-scan (drain-worker death ->
         # the synchronous reference path); the stats keep the requested
         # depth and flag the degradation separately
@@ -697,12 +721,15 @@ class StreamingScanExecutor:
                             stats.transfer_wait_s += \
                                 time.perf_counter() - t0
                             t0 = time.perf_counter()
+                            init_state = {"x": cur.block}
+                            if extras is not None:
+                                init_state.update(
+                                    extras(cur.first_page, cur.num_pages))
                             try:
                                 with TRACER.span("scan.compute"):
                                     state, reps = self._guard(
                                         lambda: run_stages(
-                                            self.stages,
-                                            {"x": cur.block}),
+                                            self.stages, init_state),
                                         "kernel_launch", stats)
                             except retryable as e:
                                 raise ScanFault(
@@ -715,8 +742,12 @@ class StreamingScanExecutor:
                             reports.extend(reps)
                             stats.batches += 1
                             batch_idx += 1
-                            submit(cur.first_page, cur.num_pages,
-                                   state[self.result_key], batch_span)
+                            if on_batch is not None:
+                                on_batch(cur.first_page, cur.num_pages,
+                                         state)
+                            if self.result_key is not None:
+                                submit(cur.first_page, cur.num_pages,
+                                       state[self.result_key], batch_span)
                         # release the page buffer NOW: some plans thread
                         # "x" through to the final stage output, so
                         # dropping `state` (not just cur.block) is what
@@ -780,6 +811,9 @@ class StreamingScanExecutor:
             raise e
 
         stats.wall_s = time.perf_counter() - t_wall
+        if self.result_key is None:   # drainless reduction scan
+            self.last_mask = None
+            return None, reports, stats
         if sink.result is None:
             assert stats.deadline_hit, "scan produced no batches"
             # deadline expired before the first batch landed: an all-NaN

@@ -243,6 +243,9 @@ class ForestQueryEngine:
         self._fingerprints: dict[int, str] = {}
         # store.drop sweeps this engine's dataset-dependent plan entries
         store.register_invalidator(self.invalidate_dataset)
+        # store.put_model re-pins sweep the replaced fingerprint's plans
+        # and decisions through this engine (stale-after-retrain fix)
+        store.register_model_invalidator(self.invalidate)
         # the cost-based optimizer behind plan="auto"/algorithm="auto"
         # (db/optimizer.py); replaceable — tests install tighter budgets
         self.optimizer = CostBasedOptimizer(self)
@@ -587,6 +590,26 @@ class ForestQueryEngine:
             root, since=mark, counters_before=before,
             counters_now=METRICS.counter_values())
         return res
+
+    # ------------------------------------------------------------------
+    # in-database training entry point (db/train.py)
+    # ------------------------------------------------------------------
+    def train(self, dataset: str, cfg, **kw):
+        """Train a forest ON a stored dataset, streaming through the same
+        tier ladder and ``StreamingScanExecutor`` the inference plans use
+        — the other half of the lifecycle (see ``db/train.py`` and
+        ``docs/training.md`` for the full contract).
+
+        The trained ``Forest`` lands in the store's model catalog under
+        ``model_name`` (default ``f"{dataset}:model"``), tree blocks
+        sharded over the mesh ``model`` axis, so it flows straight into
+        the serving plane and the optimizer's decision catalog without
+        leaving the database.  Returns a ``TrainResult`` whose forest is
+        bit-identical to ``core.train.train_forest`` on the resident
+        rows given identical bin edges.
+        """
+        from repro.db.train import train_streaming
+        return train_streaming(self, dataset, cfg, **kw)
 
     # ------------------------------------------------------------------
     # row-level serving entry point (serve/forest.py's hot path)

@@ -77,7 +77,7 @@ from repro.db.sparse import CSRPages, csr_from_dense, paginate_csr
 from repro.obs import METRICS, TRACER
 
 __all__ = ["StoredDataset", "SparseStoredDataset", "TensorBlockStore",
-           "mmap_array", "TIERS"]
+           "DenseStreamWriter", "mmap_array", "TIERS"]
 
 #: the tier ladder, fastest first — the ``auto`` cascade walks it top-down
 TIERS = ("device", "host", "disk")
@@ -285,6 +285,11 @@ class TensorBlockStore:
         # plans built against it (weakrefs — a dead engine unregisters
         # itself by getting collected)
         self._invalidators: list[weakref.ref] = []
+        # model-id invalidation hooks: engines register ``invalidate`` so
+        # re-pinning a model NAME sweeps the replaced forest's compiled
+        # plans and persisted decisions by fingerprint (re-train must not
+        # serve the old verdict)
+        self._model_invalidators: list[weakref.ref] = []
         # decision catalog (db/optimizer.py): persisted optimizer
         # verdicts keyed (model fingerprint, dataset name, dataset
         # signature, mesh signature).  Swept on the same events that
@@ -301,18 +306,34 @@ class TensorBlockStore:
             self._spill_dir = tempfile.mkdtemp(prefix="tbstore-disk-")
         return self._spill_dir
 
-    def _disk_array(self, name: str, label: str, arr: np.ndarray
-                    ) -> np.memmap:
-        """Spill one page array to ``spill_dir`` and track the file.
-
-        The filename carries a short digest of the RAW dataset name:
-        sanitization is lossy ("a/b" and "a:b" both flatten to "a_b"),
-        and two datasets sharing a path would unlink each other's
-        backing files through the spill lifecycle."""
+    def _disk_path(self, name: str, label: str) -> str:
+        """Spill-file path for one page array.  The filename carries a
+        short digest of the RAW dataset name: sanitization is lossy
+        ("a/b" and "a:b" both flatten to "a_b"), and two datasets sharing
+        a path would unlink each other's backing files through the spill
+        lifecycle."""
         digest = hashlib.blake2s(name.encode(), digest_size=4).hexdigest()
         stem = f"{re.sub(r'[^A-Za-z0-9._@+-]', '_', name)}-{digest}"
-        path = os.path.join(self.spill_dir, f"{stem}.{label}.bin")
+        return os.path.join(self.spill_dir, f"{stem}.{label}.bin")
+
+    def _disk_array(self, name: str, label: str, arr: np.ndarray
+                    ) -> np.memmap:
+        """Spill one page array to ``spill_dir`` and track the file."""
+        path = self._disk_path(name, label)
         mm = mmap_array(path, arr)
+        self._disk_paths.setdefault(name, []).append(path)
+        return mm
+
+    def _disk_empty(self, name: str, label: str, shape, dtype
+                    ) -> np.memmap:
+        """Create an EMPTY page-aligned spill file and track it — the
+        streamed-ingest target: batches are written straight into the map
+        so the full array never exists in host RAM.  An existing file is
+        unlinked first (same SIGBUS note as :func:`mmap_array`)."""
+        path = self._disk_path(name, label)
+        if os.path.exists(path):
+            os.unlink(path)
+        mm = np.memmap(path, dtype=np.dtype(dtype), mode="w+", shape=shape)
         self._disk_paths.setdefault(name, []).append(path)
         return mm
 
@@ -567,6 +588,44 @@ class TensorBlockStore:
         self._datasets[name] = ds
         return ds
 
+    # -- streamed ingest ------------------------------------------------------
+    def stream_writer(self, name: str, *, num_rows: int, num_features: int,
+                      dtype=jnp.float32, page_rows: int | None = None,
+                      tier: str = "auto", fill=np.nan,
+                      labels: np.ndarray | None = None,
+                      task: str = "classification") -> "DenseStreamWriter":
+        """Open a batch-by-batch dense ingest under ``name``.
+
+        The full [N, F] array never needs to exist in caller memory: rows
+        arrive in order via ``write(batch)`` and land DIRECTLY on the
+        resolved tier — on the disk tier each batch is written straight
+        into the page-aligned mmap file, so ingest-time host residency is
+        bounded by the batch, not the dataset (the in-database trainer's
+        binning pass ingests its binned relation this way).  ``fill``
+        pads the page-alignment tail rows (NaN for float data, the
+        MISSING bin for binned relations).  ``close()`` registers and
+        returns the ``StoredDataset``; the tier is resolved UP FRONT from
+        the declared total size, so the auto cascade sees the whole
+        ingest, not the first batch.
+        """
+        return DenseStreamWriter(self, name, num_rows=num_rows,
+                                 num_features=num_features, dtype=dtype,
+                                 page_rows=page_rows or self.default_page_rows,
+                                 tier=tier, fill=fill, labels=labels,
+                                 task=task)
+
+    def put_stream(self, name: str, batches, **kw) -> StoredDataset:
+        """Ingest an iterator of [rows_i, F] host batches (in row order)
+        through :meth:`stream_writer` — see there for the contract."""
+        w = self.stream_writer(name, **kw)
+        try:
+            for batch in batches:
+                w.write(batch)
+        except BaseException:
+            w.abort()
+            raise
+        return w.close()
+
     # -- tier migration -----------------------------------------------------
     def move(self, name: str, tier: str):
         """Migrate a dataset between tiers — see ``_move_impl`` for the
@@ -684,6 +743,14 @@ class TensorBlockStore:
             else weakref.ref(fn)
         self._invalidators.append(ref)
 
+    def register_model_invalidator(self, fn: Callable[[str], int]) -> None:
+        """Register a per-model-fingerprint invalidation hook (weakly).
+        Engines register ``invalidate`` so re-pinning a model name via
+        ``put_model`` sweeps the REPLACED forest's compiled plans."""
+        ref = weakref.WeakMethod(fn) if hasattr(fn, "__self__") \
+            else weakref.ref(fn)
+        self._model_invalidators.append(ref)
+
     def drop(self, name: str) -> int:
         """Drop a dataset AND invalidate dependent engine cache entries
         (compiled plans close over batch signatures derived from the
@@ -747,15 +814,31 @@ class TensorBlockStore:
         The store is the system of record for WHAT is served
         (``serve/forest.ForestServeEngine.register_model`` goes through
         here); the engines' ``ModelReuseCache`` LRU decides what stays
-        COMPILED.  Re-putting a name replaces the pinned forest —
-        callers owning compiled plans for the old one must sweep them
-        (the serve engine does)."""
+        COMPILED.  Re-putting a name REPLACES the pinned forest and
+        sweeps the replaced fingerprint's state — its persisted
+        optimizer decisions here, and its compiled plans through every
+        registered model invalidator — so a re-trained model can never
+        serve the old forest's verdicts (the stale-decision-after-retrain
+        regression, ``tests/test_train_streaming.py``)."""
+        old = self._models.get(name)
         entry = dict(forest=forest, trees=int(forest.num_trees),
                      depth=int(forest.depth),
                      features=int(forest.n_features),
                      model_type=forest.model_type, task=forest.task,
                      created_at=time.time(), **meta)
         self._models[name] = entry
+        if old is not None and old["forest"] is not forest:
+            old_fp = old.get("fingerprint")
+            if old_fp is None:
+                from repro.core.reuse import fingerprint_forest
+                old_fp = fingerprint_forest(old["forest"])
+            self.drop_decisions(model_id=old_fp)
+            for ref in list(self._model_invalidators):
+                fn = ref()
+                if fn is None:
+                    self._model_invalidators.remove(ref)
+                else:
+                    fn(old_fp)
         return entry
 
     def get_model(self, name: str):
@@ -791,3 +874,103 @@ class TensorBlockStore:
                 entry["nnz"] = d.nnz
             out[n] = entry
         return out
+
+
+class DenseStreamWriter:
+    """Batch-by-batch dense ingest (``TensorBlockStore.stream_writer``).
+
+    Rows arrive in order and are written straight into the resolved
+    tier's backing storage — for the disk tier an EMPTY page-aligned
+    mmap file created up front, so the full [N, F] matrix never exists
+    in host RAM during ingest.  ``close()`` pads the page-alignment tail
+    with ``fill``, flushes, registers, and returns the ``StoredDataset``;
+    ``abort()`` unlinks anything this writer created.
+    """
+
+    def __init__(self, store: TensorBlockStore, name: str, *,
+                 num_rows: int, num_features: int, dtype, page_rows: int,
+                 tier: str, fill, labels, task: str):
+        self.store = store
+        self.name = name
+        self.num_rows = int(num_rows)
+        self.page_rows = int(page_rows)
+        self.fill = fill
+        self.labels = labels
+        self.task = task
+        self._np_dtype = np.dtype(dtype)
+        row_multiple = store.data_axis_size * page_rows
+        self.total_rows = self.num_rows + (-self.num_rows) % row_multiple
+        nbytes = self.total_rows * int(num_features) * self._np_dtype.itemsize
+        self.tier = store._resolve_tier(tier, nbytes)
+        # re-put semantics mirror _put_impl: old spill files and stale
+        # optimizer decisions for this name go away when the ingest opens
+        store._release_disk(name)
+        store.drop_decisions(dataset=name)
+        shape = (self.total_rows, int(num_features))
+        if self.tier == "disk":
+            self._buf = store._disk_empty(name, "rows", shape,
+                                          self._np_dtype)
+        else:
+            self._buf = np.empty(shape, self._np_dtype)
+        self._cursor = 0
+        self._closed = False
+
+    def write(self, batch: np.ndarray) -> None:
+        """Append one [rows, F] host batch at the current row cursor."""
+        if self._closed:
+            raise RuntimeError(f"stream_writer({self.name!r}) is closed")
+        arr = np.asarray(batch)
+        if arr.dtype != self._np_dtype:
+            arr = arr.astype(self._np_dtype)
+        end = self._cursor + arr.shape[0]
+        if end > self.num_rows:
+            raise ValueError(
+                f"stream_writer({self.name!r}): batch overruns the "
+                f"declared num_rows ({end} > {self.num_rows})")
+        self._buf[self._cursor:end] = arr
+        self._cursor = end
+
+    def abort(self) -> None:
+        """Drop everything this writer created (nothing is registered)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._buf = None
+        if self.tier == "disk":
+            self.store._release_disk(self.name)
+
+    def close(self) -> StoredDataset:
+        """Pad, flush, register — returns the new ``StoredDataset``."""
+        if self._closed:
+            raise RuntimeError(f"stream_writer({self.name!r}) is closed")
+        if self._cursor != self.num_rows:
+            raise ValueError(
+                f"stream_writer({self.name!r}): wrote {self._cursor} rows, "
+                f"declared {self.num_rows}")
+        self._closed = True
+        store = self.store
+        with TRACER.span("store.put", dataset=self.name,
+                         streamed=True) as sp:
+            if self._cursor < self.total_rows:  # page-alignment tail
+                self._buf[self._cursor:] = self.fill
+            if self.tier == "disk":
+                self._buf.flush()
+                stored = self._buf
+            elif self.tier == "host":
+                stored = self._buf
+            else:
+                stored = jnp.asarray(self._buf)
+                sharding = store.data_sharding()
+                if sharding is not None:
+                    stored = jax.device_put(stored, sharding)
+            lab = None
+            if self.labels is not None:
+                lab = jnp.asarray(np.asarray(self.labels), jnp.float32)
+            ds = StoredDataset(name=self.name, data=stored,
+                               num_rows=self.num_rows,
+                               page_rows=self.page_rows, labels=lab,
+                               task=self.task, tier=self.tier)
+            store._datasets[self.name] = ds
+            sp.set(tier=self.tier)
+        METRICS.counter("store.puts").inc()
+        return ds

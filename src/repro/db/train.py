@@ -1,0 +1,357 @@
+"""In-database streamed training: the other half of the lifecycle.
+
+The paper trains its models OUTSIDE the database (scikit-learn / XGBoost /
+LightGBM, Sec. 4) and only benchmarks inference; JoinBoost's thesis
+(PAPERS.md) is that the in-database payoff comes from growing the trees
+where the data lives.  This module closes that gap for our system: the
+SAME ``StreamingScanExecutor`` + tiered ``TensorBlockStore`` machinery
+that pages inference batches through device memory now drives
+``core.train.grow_forest_scanned``'s per-level histogram scans, so
+training consumes host/disk-tier dense and CSR pages exactly like
+inference — and the trained ``Forest`` lands straight in the store's
+model catalog, where the serving plane and the optimizer pick it up.
+
+Three streaming passes, all through the executor (bounded at two live
+device page buffers, double-buffered DMA, the scan spans/metrics of
+``docs/observability.md``):
+
+  1. SKETCH (``train.sketch``, skipped when the caller supplies edges):
+     a deterministic global-stride row sample is drawn batch-by-batch
+     (CSR pages densified per batch to the full feature space, missing
+     stays NaN) and finalized into quantile bin edges by
+     ``core.train.edges_from_sample``.  The retained sample is capped at
+     ``sketch_rows`` rows — never the full matrix.
+  2. BIN INGEST (``train.bin_ingest``): each batch is binned on device
+     (``core.train.bin_features``: NaN -> the dedicated MISSING slot) and
+     appended through ``store.stream_writer`` into a NEW in-store
+     relation ``<dataset>::bins`` (uint8, same page geometry, same tier
+     by default — on the disk tier each batch is written straight into
+     the page-aligned mmap, so the full binned matrix never exists in
+     host RAM either).
+  3. LEVEL SCANS (``train.level``, ``(max_depth + 1)`` per tree): every
+     scan streams the bins relation; a routing stage updates the
+     node-of frontier on device (``core.train.route_level`` — exact
+     integer kernel) with the previous level's split parameters fed per
+     batch through the executor's ``extras`` hook, the updated frontier
+     drains back through the executor's double-buffered drain worker
+     (``result_key="node_of"``), and the ``on_batch`` hook accumulates
+     the level's gradient/hessian histograms host-side in global row
+     order (``core.train.hist_update``).
+
+BIT-IDENTITY CONTRACT: given identical bin edges, the streamed trainer
+produces a forest bit-identical to the resident ``core.train.
+train_forest`` — for any tier, storage format, page/batch geometry, or
+mesh.  Routing is exact integer arithmetic; histograms accumulate via
+``np.add.at`` whose sequential element-order update makes consecutive
+row slices bitwise equal to one whole-array call; store padding rows
+carry g = h = 0 and contribute only +0.0, which never changes a float64
+accumulator bit.  ``tests/test_train_streaming.py`` enforces the matrix.
+
+The per-level histograms themselves are HOST state, not an in-store
+relation: they are model-sized (``2^level x F x (num_bins + 1)``
+float64), bounded by the model, not the data — spilling them through the
+store would add tier churn without touching the out-of-core story (the
+data-sized state, bins + node-of frontier, IS in-store / streamed).
+``docs/training.md`` records this and the other deviations.
+
+Order caveat (documented on ``StreamingScanExecutor.execute``): the
+histogram reduction is order-sensitive, so the level scans run with the
+reliability ladders OFF — the injector-free plan is never reordered or
+split, and each batch is seen exactly once in global row order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.forest import Forest
+from repro.core.reuse import fingerprint_forest
+from repro.core.train import (TrainConfig, bin_features, edges_from_sample,
+                              grow_forest_scanned, hist_update, route_level)
+from repro.db.executor import (DEFAULT_STREAM_BATCH_BYTES, ScanStats,
+                               StreamingScanExecutor)
+from repro.db.operators import Operator, split_into_stages
+from repro.kernels.gather import csr_block_to_dense, gather_inverse_map
+from repro.obs import METRICS, TRACER
+
+__all__ = ["TrainResult", "train_streaming"]
+
+#: cap on rows the quantile sketch retains (the sketch's host footprint
+#: is ``min(num_rows, sketch_rows) * F`` floats, never the full matrix)
+DEFAULT_SKETCH_ROWS = 65536
+
+
+@dataclasses.dataclass
+class TrainResult:
+    """What ``ForestQueryEngine.train`` returns.
+
+    ``scan_stats`` holds one ``ScanStats`` per executor pass in
+    execution order — sketch (if run), bin ingest, then every per-level
+    scan — so tests and benchmarks can assert the training scans really
+    streamed (batches, bytes_streamed, max_in_flight <= 2) with the same
+    telemetry contract inference has.
+    """
+
+    forest: Forest
+    model_name: str
+    fingerprint: str
+    edges: np.ndarray                 # [F, num_bins - 1] bin boundaries
+    bins_dataset: str                 # the in-store binned relation
+    cfg: TrainConfig
+    scan_stats: list[ScanStats]
+    tier: str                         # source dataset's tier
+    storage_format: str               # "dense" | "csr"
+    num_scans: int = 0                # executor passes (incl. sketch/bins)
+    sketch_rows_used: int = 0         # rows the sketch retained (0: edges
+    #                                   were supplied by the caller)
+    wall_s: float = 0.0
+    #: the streamed path's no-full-X invariant: the trainer only ever
+    #: touches per-batch blocks + the capped sketch sample; nothing in
+    #: this module materializes the [N, F] matrix (asserted structurally
+    #: by tests via jaxpr/ScanStats, recorded here for the bench gate)
+    materialized_full_x: bool = False
+
+
+def _auto_batch_pages(engine, ds) -> int:
+    """Mirror ``ForestQueryEngine._infer``'s out-of-core batch sizing:
+    half the device budget per in-flight buffer (or the fixed default),
+    in data-axis units, rounded down; device tier scans whole."""
+    if getattr(ds, "tier", "device") == "device":
+        return ds.num_pages
+    budget = engine.store.device_budget_bytes
+    target = budget // 2 if budget else DEFAULT_STREAM_BATCH_BYTES
+    unit = max(1, engine.fplan.n_data)
+    fit = target // max(ds.page_nbytes, 1)
+    return min(ds.num_pages, max(unit, fit // unit * unit))
+
+
+def _mesh_round(engine, ds, batch_pages: int) -> int:
+    """shard_map-divisible page batches (same rule as ``_infer``)."""
+    nd = engine.fplan.n_data
+    if nd > 1:
+        batch_pages = min(-(-batch_pages // nd) * nd, ds.num_pages)
+    return batch_pages
+
+
+def _source_ops(ds) -> list[Operator]:
+    """Stage prefix that turns a source block into dense [rows, F] float:
+    identity for the dense plane; for CSR pages a per-batch densify to
+    the FULL feature space with NaN fill (missing stays missing, so it
+    bins to the MISSING slot — the same contract the dense plane's NaN
+    padding rows follow)."""
+    if getattr(ds, "storage_format", "dense") != "csr":
+        return []
+    F = ds.num_features
+    inv_full = jnp.asarray(gather_inverse_map(np.arange(F), F))
+
+    def densify(state):
+        state = dict(state)
+        state["x"] = csr_block_to_dense(state["x"], inv_full, F)
+        return state
+
+    return [Operator("train:densify-csr", densify)]
+
+
+def train_streaming(engine, dataset: str, cfg: TrainConfig, *,
+                    model_name: str | None = None,
+                    edges: np.ndarray | None = None,
+                    batch_pages: int | None = None,
+                    prefetch_depth: int = 2,
+                    bins_tier: str | None = None,
+                    sketch_rows: int = DEFAULT_SKETCH_ROWS) -> TrainResult:
+    """Train ``cfg``'s forest ON a stored dataset, streaming every pass.
+
+    ``engine`` is the ``ForestQueryEngine`` (this is the implementation
+    behind ``engine.train``).  ``edges`` short-circuits the sketch pass
+    (the parity tests pass the SAME edges to the resident reference —
+    the bit-identity contract is conditioned on identical edges);
+    ``bins_tier`` overrides where the binned relation lands (default:
+    the source's own tier); ``batch_pages`` / ``prefetch_depth`` control
+    the executor exactly as in ``engine.infer``.
+
+    The trained forest is sharded over the mesh ``model`` axis
+    (``ForestShardingPlan.shard_forest``) and pinned in the store's
+    model catalog under ``model_name`` (default ``f"{dataset}:model"``)
+    — re-pinning an existing name sweeps the replaced fingerprint's
+    compiled plans and optimizer decisions (``store.put_model``), so a
+    re-trained model can never serve the old forest's verdicts.
+    """
+    store = engine.store
+    ds = store.get(dataset)
+    fmt = getattr(ds, "storage_format", "dense")
+    tier = getattr(ds, "tier", "device")
+    N, F = ds.num_rows, ds.num_features
+    if ds.labels is None:
+        raise ValueError(f"dataset {dataset!r} has no labels to train on")
+    if cfg.num_bins > 255:
+        raise ValueError(
+            f"num_bins must fit the uint8 bins relation (<= 255 with the "
+            f"MISSING slot), got {cfg.num_bins}")
+    y = np.asarray(ds.labels, np.float32)[:N]
+    name = model_name or f"{dataset}:model"
+    bins_name = f"{dataset}::bins"
+    sharding = store.data_sharding()
+    min_bp = max(1, engine.fplan.n_data)
+    R = ds.page_rows
+    scan_stats: list[ScanStats] = []
+    t0 = time.perf_counter()
+    METRICS.counter("train.runs").inc()
+
+    with TRACER.span("train.forest", dataset=dataset, model=name,
+                     model_type=cfg.model_type, num_trees=cfg.num_trees,
+                     tier=tier, storage_format=fmt) as root:
+        src_bp = _mesh_round(engine, ds, batch_pages if batch_pages
+                             is not None else _auto_batch_pages(engine, ds))
+
+        # -- pass 1: quantile sketch -> bin edges --------------------------
+        sketch_used = 0
+        if edges is None:
+            stride = max(1, -(-N // max(1, int(sketch_rows))))
+            sample_parts: list[np.ndarray] = []
+
+            def sketch_batch(first: int, n: int, state) -> None:
+                lo = first * R
+                idx = np.arange(lo, min(lo + n * R, N))
+                sel = idx[(idx % stride) == 0] - lo
+                if sel.size:
+                    sample_parts.append(np.asarray(state["x"])[sel])
+
+            stages = split_into_stages(_source_ops(ds),
+                                       prefix="train-stage")
+            ex = StreamingScanExecutor(stages, sharding=sharding,
+                                       prefetch_depth=prefetch_depth,
+                                       result_key=None,
+                                       min_batch_pages=min_bp)
+            with TRACER.span("train.sketch", dataset=dataset,
+                             stride=stride):
+                _, _, st = ex.execute(ds, src_bp, on_batch=sketch_batch)
+            scan_stats.append(st)
+            sample = (np.concatenate(sample_parts) if sample_parts
+                      else np.zeros((0, F), np.float32))
+            sketch_used = int(sample.shape[0])
+            edges = edges_from_sample(sample, cfg.num_bins)
+        edges = np.asarray(edges, np.float32)
+        edges_j = jnp.asarray(edges)
+
+        # -- pass 2: streamed binning into the <dataset>::bins relation ----
+        writer = store.stream_writer(
+            bins_name, num_rows=N, num_features=F, dtype=np.uint8,
+            page_rows=R, tier=bins_tier if bins_tier is not None else tier,
+            fill=cfg.num_bins)
+
+        def bin_op(state):
+            state = dict(state)
+            state["bins"] = bin_features(state["x"],
+                                         edges_j).astype(jnp.uint8)
+            return state
+
+        def ingest_batch(first: int, n: int, state) -> None:
+            lo = first * R
+            real = min(lo + n * R, N) - lo
+            if real > 0:
+                writer.write(np.asarray(state["bins"])[:real])
+
+        stages = split_into_stages(
+            _source_ops(ds) + [Operator("train:bin-features", bin_op)],
+            prefix="train-stage")
+        ex = StreamingScanExecutor(stages, sharding=sharding,
+                                   prefetch_depth=prefetch_depth,
+                                   result_key=None, min_batch_pages=min_bp)
+        try:
+            with TRACER.span("train.bin_ingest", dataset=dataset,
+                             bins=bins_name):
+                _, _, st = ex.execute(ds, src_bp, on_batch=ingest_batch)
+        except BaseException:
+            writer.abort()
+            raise
+        scan_stats.append(st)
+        bins_ds = writer.close()
+        total = bins_ds.num_pages * bins_ds.page_rows
+        bins_bp = _mesh_round(engine, bins_ds,
+                              batch_pages if batch_pages is not None
+                              else _auto_batch_pages(engine, bins_ds))
+
+        # -- pass 3..: per-level scans over the bins relation ---------------
+        def run_scan(node_of, *, route=None, hist=None):
+            ops: list[Operator] = []
+            if route is not None:
+                level_r, feat, sbin, dleft, term = route
+                feat_j, sbin_j = jnp.asarray(feat), jnp.asarray(sbin)
+                dleft_j, term_j = jnp.asarray(dleft), jnp.asarray(term)
+
+                def route_op(state):
+                    state = dict(state)
+                    state["node_of"] = route_level(
+                        state["x"].astype(jnp.int32), state["node_of"],
+                        feat_j, sbin_j, dleft_j, term_j,
+                        level=level_r, num_bins=cfg.num_bins)
+                    return state
+
+                ops.append(Operator("train:route-level", route_op))
+            # route_level is itself jitted (static level); stage-level jit
+            # would retrace per run_scan call since the closure is new
+            stages = split_into_stages(ops, prefix="train-stage",
+                                       jit=False)
+
+            hg = hh = None
+            if hist is not None:
+                g, h, level_h = hist
+                hg = np.zeros(((1 << level_h), F, cfg.num_bins + 1),
+                              np.float64)
+                hh = np.zeros_like(hg)
+
+            def extras(first: int, n: int) -> dict:
+                lo = first * R
+                return {"node_of": jnp.asarray(node_of[lo: lo + n * R])}
+
+            def on_batch(first: int, n: int, state) -> None:
+                lo = first * R
+                nb = (np.asarray(state["node_of"]) if route is not None
+                      else node_of[lo: lo + n * R])
+                hist_update(hg, hh, np.asarray(state["x"]), nb,
+                            g[lo: lo + n * R], h[lo: lo + n * R])
+
+            ex = StreamingScanExecutor(
+                stages, sharding=sharding, prefetch_depth=prefetch_depth,
+                result_key="node_of" if route is not None else None,
+                min_batch_pages=min_bp)
+            with TRACER.span("train.level",
+                             level=route[0] + 1 if route else 0,
+                             hist=hist is not None):
+                out_np, _, st = ex.execute(
+                    bins_ds, bins_bp,
+                    extras=extras if route is not None else None,
+                    on_batch=on_batch if hist is not None else None)
+            scan_stats.append(st)
+            METRICS.counter("train.level_scans").inc()
+            if route is None:
+                return node_of, (hg, hh) if hist is not None else None
+            new_node = np.zeros_like(node_of)
+            new_node[:N] = out_np          # padding rows stay inert (g=h=0)
+            return new_node, (hg, hh) if hist is not None else None
+
+        forest = grow_forest_scanned(run_scan, y=y, num_rows=N,
+                                     num_features=F, total_rows=total,
+                                     edges=edges, cfg=cfg)
+        METRICS.counter("train.trees_grown").inc(cfg.num_trees)
+
+        # -- land it: model-axis sharding + the store's model catalog -------
+        forest = engine.fplan.shard_forest(forest)
+        fp = fingerprint_forest(forest)
+        store.put_model(name, forest, fingerprint=fp, trained_on=dataset,
+                        bins_dataset=bins_name, num_bins=cfg.num_bins,
+                        streamed=True)
+        root.set(fingerprint=fp, scans=len(scan_stats))
+
+    return TrainResult(
+        forest=forest, model_name=name, fingerprint=fp, edges=edges,
+        bins_dataset=bins_name, cfg=cfg, scan_stats=scan_stats,
+        tier=tier, storage_format=fmt, num_scans=len(scan_stats),
+        sketch_rows_used=sketch_used,
+        wall_s=time.perf_counter() - t0)

@@ -216,6 +216,18 @@ class ForestShardingPlan:
         spec_tree = _jax.tree_util.tree_map(lambda _: self.tree_spec, forest)
         return tree_named(self.mesh, spec_tree)
 
+    def shard_forest(self, forest):
+        """Place a Forest's tree blocks over the ``model`` axis (identity
+        when the mesh has no model axis).  The in-database trainer lands
+        its freshly grown forest through this before pinning it in the
+        model catalog, so a catalog model is already laid out the way the
+        relation-centric plans shard it."""
+        sh = self.forest_shardings(forest)
+        if sh is None:
+            return forest
+        import jax as _jax
+        return _jax.device_put(forest, sh)
+
 
 def make_forest_plan(mesh) -> ForestShardingPlan:
     """Build the forest-inference axis mapping for ``mesh``.

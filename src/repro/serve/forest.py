@@ -228,6 +228,24 @@ class ForestServeEngine:
             self.warmup(name)
         return m
 
+    def register_from_catalog(self, name: str, *,
+                              algorithm: str | None = None,
+                              plan: str | None = None,
+                              warmup: bool = True) -> ServedModel:
+        """Serve a model already pinned in the store's model catalog —
+        the in-database trainer's handoff (``ForestQueryEngine.train``
+        lands its forest via ``store.put_model``; this picks it up
+        without the forest ever leaving the database).  Catalog metadata
+        supplies the algorithm/plan defaults when the trainer (or a
+        previous registration) recorded them; explicit arguments win."""
+        forest = self.store.get_model(name)
+        meta = self.store.model_catalog().get(name, {})
+        return self.register_model(
+            name, forest,
+            algorithm=algorithm or meta.get("algorithm"),
+            plan=plan or meta.get("plan"),
+            warmup=warmup)
+
     def warmup(self, name: str) -> int:
         """Compile (or re-touch) one plan per bucket rung for ``name``.
         Returns the number of plan-cache MISSES the warmup paid — 0

@@ -79,3 +79,221 @@ def test_deterministic_given_seed():
     for k, a in f1.arrays().items():
         np.testing.assert_array_equal(np.asarray(a),
                                       np.asarray(getattr(f2, k)), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# GOSS sampling (LightGBM's a/b keep-top + upweight-rest scheme)
+# ---------------------------------------------------------------------------
+
+
+def _goss_weights(seed=11, n=4000, a=0.2, b=0.1):
+    """The per-row GOSS weight w implied by (g_goss / g_plain)."""
+    import jax
+    import jax.numpy as jnp2
+    from repro.core.train import _tree_gradients
+    rng = np.random.default_rng(seed)
+    margin = rng.normal(size=n).astype(np.float32)
+    y = (rng.random(n) < 0.5).astype(np.float32)
+    cfg = TrainConfig(model_type="lightgbm", goss_top=a, goss_rest=b)
+    cfg_x = TrainConfig(model_type="xgboost")
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    g, h = _tree_gradients(margin, jnp2.asarray(y), cfg, 1,
+                           keys[0], keys[1])
+    g0, h0 = _tree_gradients(margin, jnp2.asarray(y), cfg_x, 1,
+                             keys[0], keys[1])
+    with np.errstate(divide="ignore", invalid="ignore"):
+        w = np.where(np.abs(g0) > 0, g / g0, h / np.maximum(h0, 1e-12))
+    return w, g0, a, b
+
+
+def test_goss_keep_and_sample_mass():
+    """Top-a rows by |g| ALL survive at weight 1; of the rest, ~b are
+    kept; everything else is dropped (weight 0)."""
+    w, g0, a, b = _goss_weights()
+    n = w.shape[0]
+    order = np.argsort(-np.abs(g0))
+    top, rest = order[: int(a * n)], order[int(a * n):]
+    np.testing.assert_allclose(w[top], 1.0, atol=1e-5)
+    kept_rest = np.abs(w[rest]) > 1e-6
+    assert abs(kept_rest.mean() - b) < 0.02, kept_rest.mean()
+    assert (np.abs(w[rest][~kept_rest]) < 1e-6).all()
+
+
+def test_goss_rest_upweighting():
+    """Sampled rest rows carry the (1-a)/b compensation weight, so the
+    rest stratum's expected total mass is preserved."""
+    w, g0, a, b = _goss_weights()
+    n = w.shape[0]
+    rest = np.argsort(-np.abs(g0))[int(a * n):]
+    kept = w[rest][np.abs(w[rest]) > 1e-6]
+    np.testing.assert_allclose(kept, (1 - a) / b, rtol=1e-4)
+    # expected stratum mass: each rest row contributes b * (1-a)/b = 1-a
+    # in expectation, so the mean rest weight concentrates around 1-a
+    assert abs(w[rest].mean() - (1 - a)) < 0.1
+
+
+def test_goss_first_tree_sees_all_rows():
+    """LightGBM convention: tree 0 trains on the full gradient set."""
+    import jax
+    import jax.numpy as jnp2
+    from repro.core.train import _tree_gradients
+    rng = np.random.default_rng(12)
+    margin = rng.normal(size=500).astype(np.float32)
+    y = (rng.random(500) < 0.5).astype(np.float32)
+    keys = jax.random.split(jax.random.PRNGKey(3), 2)
+    g_l, h_l = _tree_gradients(margin, jnp2.asarray(y),
+                               TrainConfig(model_type="lightgbm"), 0,
+                               keys[0], keys[1])
+    g_x, h_x = _tree_gradients(margin, jnp2.asarray(y),
+                               TrainConfig(model_type="xgboost"), 0,
+                               keys[0], keys[1])
+    np.testing.assert_array_equal(g_l, g_x)
+    np.testing.assert_array_equal(h_l, h_x)
+
+
+# ---------------------------------------------------------------------------
+# NaN default-direction learning
+# ---------------------------------------------------------------------------
+
+
+def test_nan_default_direction_actually_routes_missing():
+    """Label depends ONLY on missingness of feature 0: the split search
+    must learn the default direction that routes NaN rows to their own
+    side (XGBoost's sparsity-aware split), or accuracy stays ~0.5."""
+    rng = np.random.default_rng(13)
+    n = 800
+    x = rng.normal(size=(n, 4)).astype(np.float32)
+    miss = rng.random(n) < 0.5
+    x[miss, 0] = np.nan
+    y = miss.astype(np.float32)
+    cfg = TrainConfig(model_type="xgboost", num_trees=10, max_depth=2,
+                      learning_rate=0.5)
+    forest = train_forest(x, y, cfg)
+    pred = np.asarray(predict_label(forest, jnp.asarray(x)))
+    assert (pred == y).mean() > 0.97
+    # fresh NaN rows (never seen) must route to the missing side too
+    x_new = rng.normal(size=(64, 4)).astype(np.float32)
+    x_new[:, 0] = np.nan
+    assert np.asarray(predict_label(forest, jnp.asarray(x_new))).mean() \
+        > 0.97
+
+
+def test_regression_lightgbm_learns():
+    rng = np.random.default_rng(14)
+    x = rng.normal(size=(600, 5)).astype(np.float32)
+    y = (np.sin(x[:, 0]) + 0.5 * x[:, 1]).astype(np.float32)
+    cfg = TrainConfig(model_type="lightgbm", task="regression",
+                      num_trees=40, max_depth=4, learning_rate=0.2)
+    forest = train_forest(x, y, cfg)
+    pred = np.asarray(predict_proba(forest, jnp.asarray(x)))
+    mse0 = np.mean((y - y.mean()) ** 2)
+    assert np.mean((y - pred) ** 2) < 0.4 * mse0
+
+
+# ---------------------------------------------------------------------------
+# reg_lambda: monotone leaf shrinkage
+# ---------------------------------------------------------------------------
+
+
+def test_reg_lambda_monotone_leaf_shrinkage():
+    """With the tree structure pinned (one strong feature), growing L2
+    shrinks every leaf weight monotonically: |leaf| ~ |G| / (H + lam)."""
+    rng = np.random.default_rng(15)
+    x = rng.normal(size=(500, 1)).astype(np.float32)
+    y = (x[:, 0] > 0).astype(np.float32)
+    prev_feat = prev_thr = None
+    prev_mag = np.inf
+    mags = []
+    for lam in (0.0, 1.0, 10.0, 100.0):
+        cfg = TrainConfig(model_type="xgboost", num_trees=1, max_depth=1,
+                          reg_lambda=lam, learning_rate=1.0)
+        f = train_forest(x, y, cfg)
+        if prev_feat is not None:  # same split, only the weights move
+            np.testing.assert_array_equal(np.asarray(f.feature), prev_feat)
+            np.testing.assert_array_equal(np.asarray(f.threshold), prev_thr)
+        prev_feat = np.asarray(f.feature)
+        prev_thr = np.asarray(f.threshold)
+        mag = np.abs(np.asarray(f.leaf_value)).max()
+        assert mag < prev_mag or np.isclose(mag, prev_mag), (lam, mag)
+        prev_mag = mag
+        mags.append(mag)
+    # |leaf| = |G| / (H + lam): lam=100 against leaf hessians of ~60
+    # must shrink the lam=0 weight by well over half
+    assert mags[-1] < 0.5 * mags[0], mags
+
+
+# ---------------------------------------------------------------------------
+# depth / node-budget edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_depth_one_stump():
+    x, y = _blobs(seed=16)
+    cfg = TrainConfig(model_type="xgboost", num_trees=8, max_depth=1,
+                      learning_rate=0.5)
+    forest = train_forest(x, y, cfg)
+    assert forest.depth == 1 and forest.leaf_value.shape == (8, 2)
+    pred = np.asarray(predict_label(forest, jnp.asarray(x)))
+    assert (pred == y).mean() > 0.6  # stumps on a linear blob
+
+
+def test_min_split_gain_makes_all_nodes_terminal():
+    """An unreachable gain floor collapses every tree to one leaf: the
+    terminal chain passes all rows left, so predictions are constant."""
+    x, y = _blobs(seed=17)
+    cfg = TrainConfig(model_type="xgboost", num_trees=3, max_depth=3,
+                      min_split_gain=1e9)
+    forest = train_forest(x, y, cfg)
+    assert np.asarray(forest.node_is_leaf).all()
+    assert np.isinf(np.asarray(forest.threshold)).all()
+    raw = np.asarray(predict_proba(forest, jnp.asarray(x)))
+    np.testing.assert_allclose(raw, raw[0], atol=0)
+
+
+def test_min_child_weight_blocks_splits():
+    """A child-hessian floor above the dataset's total weight forbids
+    every split (the OTHER node-budget path to a terminal root)."""
+    x, y = _blobs(n=200, seed=18)
+    cfg = TrainConfig(model_type="xgboost", num_trees=2, max_depth=3,
+                      min_child_weight=1e6)
+    forest = train_forest(x, y, cfg)
+    assert np.asarray(forest.node_is_leaf).all()
+
+
+def test_rf_colsample_restricts_split_features():
+    """Per-tree feature subsampling: each RF tree may only split on its
+    drawn half of the features (terminal nodes record feature 0)."""
+    x, y = _blobs(n=800, f=8, seed=19)
+    cfg = TrainConfig(model_type="randomforest", num_trees=6, max_depth=4,
+                      colsample=0.5, seed=2)
+    forest = train_forest(x, y, cfg)
+    feat = np.asarray(forest.feature)
+    leaf = np.asarray(forest.node_is_leaf)
+    k = int(round(0.5 * 8))
+    masks = set()
+    for t in range(cfg.num_trees):
+        used = frozenset(np.unique(feat[t][~leaf[t]]).tolist())
+        assert len(used) <= k, f"tree {t} split on {sorted(used)}"
+        masks.add(used)
+    assert len(masks) > 1, "every tree drew the same feature subset"
+
+
+def test_rf_trees_differ_by_bootstrap():
+    """Poisson bagging: RF trees must not be clones of each other."""
+    x, y = _blobs(seed=20)
+    cfg = TrainConfig(model_type="randomforest", num_trees=4, max_depth=4)
+    forest = train_forest(x, y, cfg)
+    lv = np.asarray(forest.leaf_value)
+    assert any(not np.array_equal(lv[0], lv[t]) for t in range(1, 4))
+
+
+def test_explicit_edges_match_internal_binning():
+    """train_forest(edges=...) with the exact-quantile edges is the
+    identity — the hook the streamed trainer's parity contract uses."""
+    x, y = _blobs(seed=21, nan_frac=0.1)
+    cfg = TrainConfig(model_type="xgboost", num_trees=4, max_depth=3)
+    f1 = train_forest(x, y, cfg)
+    f2 = train_forest(x, y, cfg, edges=quantile_bin_edges(x, cfg.num_bins))
+    for k, a in f1.arrays().items():
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(getattr(f2, k)), err_msg=k)

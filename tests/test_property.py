@@ -144,3 +144,79 @@ def test_ssd_chunked_matches_recurrence(seed):
     step = jnp.concatenate(outs, axis=1)
     np.testing.assert_allclose(np.asarray(step), np.asarray(full),
                                rtol=2e-3, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# In-database training invariants (core/train.py + db/train.py)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**16), st.integers(1, 8), st.integers(20, 200),
+       st.integers(4, 32), st.floats(0.0, 0.6))
+@settings(**SETTINGS)
+def test_quantile_edges_monotone_and_missing_slot(seed, F, N, num_bins,
+                                                  nan_frac):
+    """Edges are per-column non-decreasing and NaN always lands in the
+    dedicated MISSING slot, never in a value bin — under arbitrary
+    random NaN patterns (including all-NaN and constant columns)."""
+    from repro.core.train import quantile_bin_edges, bin_features
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(N, F)).astype(np.float32)
+    x[rng.random((N, F)) < nan_frac] = np.nan
+    if F >= 2:
+        x[:, 1] = 7.0          # constant column -> +inf edges, still valid
+    edges = quantile_bin_edges(x, num_bins)
+    assert edges.shape == (F, num_bins - 1)
+    # inf <= inf is True, so this also covers the dedup/constant columns.
+    assert np.all(edges[:, :-1] <= edges[:, 1:])
+    bins = np.asarray(bin_features(x, edges))
+    nan_mask = np.isnan(x)
+    assert np.all(bins[nan_mask] == num_bins)
+    assert np.all(bins[~nan_mask] >= 0)
+    assert np.all(bins[~nan_mask] < num_bins)
+
+
+@given(st.integers(0, 2**16),
+       st.sampled_from(["xgboost", "lightgbm", "randomforest"]))
+@settings(max_examples=8, deadline=None)
+def test_trained_forest_compact_invariant(seed, model_type):
+    """compact_forest on a trained forest never changes predictions:
+    scoring x[:, gather_idx] with the compact forest is bit-identical
+    to scoring x with the original."""
+    from repro.core.train import TrainConfig, train_forest
+    from repro.core.forest import compact_forest
+    rng = np.random.default_rng(seed)
+    N, F = 160, 7
+    x = rng.normal(size=(N, F)).astype(np.float32)
+    y = (x[:, 0] + 0.5 * x[:, 2] > 0).astype(np.float32)
+    cfg = TrainConfig(model_type=model_type, num_trees=3, max_depth=3,
+                      num_bins=16, colsample=0.7, seed=seed)
+    forest = train_forest(x, y, cfg)
+    cf, gather_idx = compact_forest(forest)
+    want = predict_raw(forest, jnp.asarray(x))
+    got = predict_raw(cf, jnp.asarray(x[:, gather_idx]))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(0, 2**16))
+@settings(max_examples=5, deadline=None)
+def test_trained_forest_same_across_plans(seed):
+    """A trained forest scores identically under plan=udf and plan=rel."""
+    from repro.core.train import TrainConfig, train_forest
+    from repro.core.reuse import ModelReuseCache
+    from repro.db.store import TensorBlockStore
+    from repro.db.query import ForestQueryEngine
+    rng = np.random.default_rng(seed)
+    N, F = 192, 6
+    x = rng.normal(size=(N, F)).astype(np.float32)
+    y = (x[:, 1] - x[:, 3] > 0).astype(np.float32)
+    forest = train_forest(x, y, TrainConfig(num_trees=3, max_depth=3,
+                                            num_bins=16, seed=seed))
+    store = TensorBlockStore(default_page_rows=64)
+    store.put("prop-train", x)
+    engine = ForestQueryEngine(store, reuse_cache=ModelReuseCache())
+    udf = engine.infer("prop-train", forest, plan="udf")
+    rel = engine.infer("prop-train", forest, plan="rel")
+    np.testing.assert_allclose(np.asarray(udf.predictions),
+                               np.asarray(rel.predictions),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,299 @@
+"""In-database streamed training == resident training, bit for bit.
+
+The contract under test (``db/train.py``, ``docs/training.md``): given
+identical bin edges, ``ForestQueryEngine.train`` — which streams every
+pass (sketch, bin ingest, per-level histogram scans) through the tiered
+store and ``StreamingScanExecutor`` — produces a forest BIT-identical to
+the resident ``core.train.train_forest``, across {host, disk} tier x
+{dense, CSR} format x {mesh, mesh-less} x all three model families.
+Plus: the scans obey the executor's telemetry contract (<= 2 live device
+page buffers, real streaming), the trained model lands in the store's
+model catalog / serving plane, and re-training sweeps the compiled-plan
+cache AND the optimizer decision catalog (the stale-decision-after-
+retrain regression).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.train import TrainConfig, quantile_bin_edges, train_forest
+from repro.db.query import ForestQueryEngine
+from repro.db.store import TensorBlockStore
+
+NDEV = len(jax.devices())
+PAGE = 64
+N, F = 700, 9
+
+
+def _data(seed=0, nan_frac=0.1):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(N, F)).astype(np.float32)
+    w = rng.normal(size=F).astype(np.float32)
+    y = (np.nan_to_num(x) @ w > 0).astype(np.float32)
+    if nan_frac:
+        x[rng.random(x.shape) < nan_frac] = np.nan
+    return x, y
+
+
+def _store(tier, *, mesh=None, fmt="dense", data=None):
+    """A store whose budgets force ``tier`` for the test dataset."""
+    x, y = data if data is not None else _data()
+    kw = dict(default_page_rows=PAGE, device_budget_bytes=16 << 10)
+    if tier == "disk":
+        kw["host_budget_bytes"] = 8 << 10
+    store = TensorBlockStore(mesh, **kw)
+    if fmt == "csr":
+        store.put_sparse("d", x, labels=y, tier="auto")
+    else:
+        store.put("d", x, labels=y, tier="auto")
+    assert store.get("d").tier == tier
+    return store, x, y
+
+
+def assert_forests_identical(a, b, msg=""):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for i, (u, v) in enumerate(zip(la, lb)):
+        ru, rv = np.asarray(u), np.asarray(v)
+        assert ru.dtype == rv.dtype, (msg, i, ru.dtype, rv.dtype)
+        np.testing.assert_array_equal(ru, rv, err_msg=f"{msg} leaf {i}")
+
+
+# ---------------------------------------------------------------------------
+# the bit-identity matrix: tier x format x model family (mesh-less)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model_type", ["randomforest", "xgboost",
+                                        "lightgbm"])
+@pytest.mark.parametrize("tier", ["host", "disk"])
+def test_streamed_matches_resident_dense(tier, model_type):
+    store, x, y = _store(tier)
+    cfg = TrainConfig(model_type=model_type, num_trees=4, max_depth=3,
+                      num_bins=16, colsample=0.6, seed=3)
+    edges = quantile_bin_edges(x, cfg.num_bins)
+    ref = train_forest(x, y, cfg, edges=edges)
+    res = ForestQueryEngine(store).train("d", cfg, edges=edges)
+    assert_forests_identical(ref, res.forest, f"{tier}/{model_type}")
+    assert res.tier == tier and res.storage_format == "dense"
+    assert res.materialized_full_x is False
+
+
+@pytest.mark.parametrize("model_type", ["randomforest", "xgboost",
+                                        "lightgbm"])
+@pytest.mark.parametrize("tier", ["host", "disk"])
+def test_streamed_matches_resident_csr(tier, model_type):
+    """CSR pages densify per batch with NaN fill, so the parity target is
+    resident training on the SAME matrix (missing = NaN = MISSING bin)."""
+    store, x, y = _store(tier, fmt="csr")
+    cfg = TrainConfig(model_type=model_type, num_trees=3, max_depth=3,
+                      num_bins=16, seed=5)
+    edges = quantile_bin_edges(x, cfg.num_bins)
+    ref = train_forest(x, y, cfg, edges=edges)
+    res = ForestQueryEngine(store).train("d", cfg, edges=edges)
+    assert_forests_identical(ref, res.forest, f"csr/{tier}/{model_type}")
+    assert res.storage_format == "csr"
+
+
+def test_batch_geometry_never_changes_the_forest():
+    """Any batch size / prefetch depth — same bits (the np.add.at
+    canonical-accumulation argument in core/train's module doc)."""
+    store, x, y = _store("host")
+    cfg = TrainConfig(num_trees=3, max_depth=3, num_bins=16)
+    edges = quantile_bin_edges(x, cfg.num_bins)
+    eng = ForestQueryEngine(store)
+    base = eng.train("d", cfg, edges=edges, batch_pages=1).forest
+    for bp, depth in ((2, 2), (3, 1), (7, 2)):
+        got = eng.train("d", cfg, edges=edges, batch_pages=bp,
+                        prefetch_depth=depth).forest
+        assert_forests_identical(base, got, f"batch_pages={bp}")
+
+
+# ---------------------------------------------------------------------------
+# mesh x mesh-less (runs under the CI multi-device topology)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(
+    NDEV < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+def test_streamed_mesh_matches_meshless():
+    x, y = _data(seed=7)
+    cfg = TrainConfig(num_trees=4, max_depth=3, num_bins=16)
+    edges = quantile_bin_edges(x, cfg.num_bins)
+    ref = train_forest(x, y, cfg, edges=edges)
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    store, _, _ = _store("host", mesh=mesh, data=(x, y))
+    eng = ForestQueryEngine(store)
+    res = eng.train("d", cfg, edges=edges)
+    assert_forests_identical(ref, res.forest, "mesh")
+    # tree blocks land sharded over the model axis (ForestShardingPlan)
+    sh = res.forest.threshold.sharding
+    assert getattr(sh, "spec", None) is not None
+    assert tuple(sh.spec) == ("model",)
+
+
+# ---------------------------------------------------------------------------
+# ScanStats: training scans stream under the same telemetry contract
+# ---------------------------------------------------------------------------
+
+
+def test_training_scan_stats():
+    store, x, y = _store("disk")
+    cfg = TrainConfig(num_trees=2, max_depth=3, num_bins=16)
+    # explicit batch_pages: the uint8 bins relation is 4x smaller than
+    # the f32 source, so the budget-driven auto size would (correctly)
+    # scan it in one batch at this toy scale — force real streaming
+    res = ForestQueryEngine(store).train("d", cfg, sketch_rows=128,
+                                         batch_pages=4)
+    # sketch + bin ingest + num_trees * (max_depth + 1) level scans
+    assert res.num_scans == 2 + cfg.num_trees * (cfg.max_depth + 1)
+    assert len(res.scan_stats) == res.num_scans
+    src_nbytes = store.get("d").nbytes
+    for st in res.scan_stats:
+        assert st.batches > 1, "training scan did not stream"
+        assert st.max_in_flight <= 2, "page-buffer bound violated"
+        assert st.bytes_streamed > 0
+        # no batch ever approached a whole-matrix transfer
+        assert st.bytes_streamed / st.batches < src_nbytes
+    assert res.scan_stats[0].tier == "disk"       # sketch reads the source
+    assert res.scan_stats[-1].tier == "disk"      # bins inherit the tier
+    assert 0 < res.sketch_rows_used <= 128
+
+
+def test_bins_relation_registered_in_store():
+    store, x, y = _store("host")
+    cfg = TrainConfig(num_trees=2, max_depth=2, num_bins=16)
+    edges = quantile_bin_edges(x, cfg.num_bins)
+    res = ForestQueryEngine(store).train("d", cfg, edges=edges)
+    assert res.bins_dataset == "d::bins"
+    bd = store.get("d::bins")
+    assert bd.data.dtype == np.uint8
+    assert bd.tier == "host" and bd.page_rows == PAGE
+    assert bd.num_rows == N
+    host = np.asarray(bd.data)
+    # real rows carry valid bins; page-padding tail is the MISSING slot
+    assert host[:N].max() <= cfg.num_bins
+    if host.shape[0] > N:
+        assert (host[N:] == cfg.num_bins).all()
+
+
+def test_num_bins_must_fit_uint8():
+    store, x, y = _store("host")
+    with pytest.raises(ValueError, match="uint8"):
+        ForestQueryEngine(store).train(
+            "d", TrainConfig(num_bins=256, num_trees=1))
+
+
+def test_unlabeled_dataset_refused():
+    store = TensorBlockStore(default_page_rows=PAGE)
+    store.put("u", np.zeros((8, 2), np.float32))
+    with pytest.raises(ValueError, match="labels"):
+        ForestQueryEngine(store).train("u", TrainConfig(num_trees=1))
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: catalog landing, serving plane, observability
+# ---------------------------------------------------------------------------
+
+
+def test_trained_model_lands_in_catalog_and_serves():
+    store, x, y = _store("host")
+    cfg = TrainConfig(num_trees=3, max_depth=3, num_bins=16)
+    eng = ForestQueryEngine(store)
+    res = eng.train("d", cfg)
+    assert store.get_model("d:model") is res.forest
+    meta = store.model_catalog()["d:model"]
+    assert meta["fingerprint"] == res.fingerprint
+    assert meta["trained_on"] == "d" and meta["streamed"] is True
+    # the catalog model runs through the normal inference plans
+    q = eng.infer("d", store.get_model("d:model"), plan="udf",
+                  model_id=res.fingerprint)
+    assert np.isfinite(np.asarray(q.predictions)).all()
+    # ... and through the serving plane, straight from the catalog
+    from repro.serve.forest import ForestServeEngine
+    serve = ForestServeEngine(store, query_engine=eng)
+    m = serve.register_from_catalog("d:model", warmup=False)
+    out = serve.predict("d:model", x[:8])
+    assert out.shape == (8,) and np.isfinite(out).all()
+    assert m.model_id == res.fingerprint
+
+
+def test_train_metrics_and_spans():
+    from repro.obs import METRICS, TRACER
+    store, x, y = _store("host")
+    cfg = TrainConfig(num_trees=2, max_depth=2, num_bins=16)
+    runs0 = METRICS.counter("train.runs").value
+    trees0 = METRICS.counter("train.trees_grown").value
+    scans0 = METRICS.counter("train.level_scans").value
+    TRACER.enable()
+    try:
+        mark = TRACER.mark()
+        res = ForestQueryEngine(store).train("d", cfg, sketch_rows=128)
+        names = {s.name for s in TRACER.finished(mark)}
+    finally:
+        TRACER.disable()
+    assert {"train.forest", "train.sketch", "train.bin_ingest",
+            "train.level"} <= names
+    assert METRICS.counter("train.runs").value == runs0 + 1
+    assert METRICS.counter("train.trees_grown").value \
+        == trees0 + cfg.num_trees
+    assert METRICS.counter("train.level_scans").value \
+        == scans0 + cfg.num_trees * (cfg.max_depth + 1)
+    assert res.wall_s > 0
+
+
+# ---------------------------------------------------------------------------
+# the stale-decision-after-retrain regression
+# ---------------------------------------------------------------------------
+
+
+def test_retrain_sweeps_plans_and_decisions():
+    """Re-training under the same model name must sweep BOTH the compiled-
+    plan cache and the optimizer decision catalog for the replaced
+    fingerprint — a retrained model must never serve the old verdict."""
+    from repro.core.reuse import ModelReuseCache
+    store, x, y = _store("host")
+    eng = ForestQueryEngine(store, reuse_cache=ModelReuseCache(8),
+                            plan_cache=ModelReuseCache(8))
+    cfg = TrainConfig(num_trees=2, max_depth=2, num_bins=16, seed=1)
+    r1 = eng.train("d", cfg)
+    fp1 = r1.fingerprint
+    m1 = store.get_model("d:model")
+    # compile a plan and persist an optimizer decision for fp1
+    eng.infer("d", m1, plan="udf", model_id=fp1)
+    eng.infer("d", m1, plan="auto", algorithm="predicated", model_id=fp1)
+    assert any(k[1] == fp1 for k in eng.plan_cache._entries)
+    assert any(k[0] == fp1 for k in store.decision_catalog())
+    # retrain (different config -> different forest) under the same name
+    r2 = eng.train("d", TrainConfig(num_trees=3, max_depth=2,
+                                    num_bins=16, seed=2))
+    assert r2.fingerprint != fp1
+    assert store.get_model("d:model") is r2.forest
+    assert not any(k[1] == fp1 for k in eng.plan_cache._entries), \
+        "stale compiled plan survived the retrain"
+    assert not any(k[0] == fp1 for k in store.decision_catalog()), \
+        "stale optimizer decision survived the retrain"
+    # a fresh auto query decides (and serves) the NEW model
+    q = eng.infer("d", r2.forest, plan="auto", algorithm="predicated",
+                  model_id=r2.fingerprint)
+    assert any(k[0] == r2.fingerprint for k in store.decision_catalog())
+    assert np.isfinite(np.asarray(q.predictions)).all()
+
+
+def test_put_model_same_forest_does_not_sweep():
+    """Re-pinning the SAME forest object (serve re-registration) must not
+    invalidate its own plans/decisions."""
+    store, x, y = _store("host")
+    eng = ForestQueryEngine(store)
+    r = eng.train("d", TrainConfig(num_trees=2, max_depth=2, num_bins=16))
+    eng.infer("d", r.forest, plan="auto", algorithm="predicated",
+              model_id=r.fingerprint)
+    n_before = len(store.decision_catalog())
+    store.put_model("d:model", r.forest, fingerprint=r.fingerprint)
+    assert len(store.decision_catalog()) == n_before
